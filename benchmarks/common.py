@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kwargs):
+    """Run fn, return (result, us_per_call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+def emit(rows: Iterable[Tuple[str, float, str]]) -> List[str]:
+    """Print ``name,us_per_call,derived`` CSV lines and return them."""
+    lines = []
+    for name, us, derived in rows:
+        line = f"{name},{us:.1f},{derived}"
+        print(line)
+        lines.append(line)
+    return lines

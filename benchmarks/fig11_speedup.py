@@ -1,0 +1,40 @@
+"""Fig. 11 — speedup / energy vs dense digital-PIM baseline on VGG19,
+ResNet18, MobileNetV2 at 75/80/85/90% weight sparsity.
+
+Protocol (Sec. VI-C): only value + bit sparsity of WEIGHTS; dynamic input
+bit-column skipping disabled; only std/pw-conv + FC layers evaluated.
+Paper reference: VGG19 5.50x-8.10x, energy savings 73.68%-83.90%.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import pim_model as pm
+from repro.core.workload_gen import model_metadata
+from .common import emit, timed
+
+SPARSITY_POINTS = [(0.0, 75), (0.2, 80), (0.4, 85), (0.6, 90)]
+ACCEL = ("std", "pw", "fc")
+
+
+def run():
+    rows = []
+    for name in ("vgg19", "resnet18", "mobilenetv2"):
+        layers = [l for l in CNN_MODELS[name]() if l.kind in ACCEL]
+        dense = pm.evaluate_dense_baseline(layers)
+        for vs, label in SPARSITY_POINTS:
+            def point():
+                md = model_metadata(layers, vs, name, seed=0)
+                ours = pm.evaluate_model(layers, md, use_input_bit=False)
+                return (dense.cycles / ours.cycles,
+                        1 - ours.energy_pj / dense.energy_pj,
+                        ours.u_act)
+            (sp, es, u), us = timed(point)
+            rows.append((f"fig11.{name}.s{label}", us,
+                         f"speedup={sp:.2f}x energy_savings={es*100:.1f}% "
+                         f"u_act={u*100:.1f}%"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 12 — end-to-end speedup/energy breakdown by sparsity type
+(value-only / bit-only incl. input skip / hybrid) over the five models.
+
+Paper reference maxima: bit-level 5.46x / 77.66% savings; hybrid 8.01x /
+85.28% savings; compact models much lower (SIMD-core share, Fig. 13).
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import pim_model as pm
+from repro.core.workload_gen import model_metadata
+from .common import emit, timed
+
+MODES = {
+    "value": dict(use_weight_bit=False, use_input_bit=False),
+    "bit": dict(use_value=False),
+    "hybrid": dict(),
+}
+
+
+def run():
+    rows = []
+    for name in CNN_MODELS:
+        layers = CNN_MODELS[name]()
+        dense = pm.evaluate_dense_baseline(layers)
+        md = model_metadata(layers, 0.6, name, seed=0)
+        for mode, kw in MODES.items():
+            def point():
+                ours = pm.evaluate_model(layers, md, **kw)
+                return (dense.cycles / ours.cycles,
+                        1 - ours.energy_pj / dense.energy_pj, ours.u_act)
+            (sp, es, u), us = timed(point)
+            rows.append((f"fig12.{name}.{mode}", us,
+                         f"speedup={sp:.2f}x energy_savings={es*100:.1f}% "
+                         f"u_act={u*100:.1f}%"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Fig. 13 — execution-time breakdown by operation type on the DB-PIM
+system for MobileNetV2 and EfficientNetB0.
+
+Paper reference: std/pw-conv+FC only 51.3% (MNv2) / 60.8% (EffNet) of
+runtime; dw-conv 48.3% / 35.9%; mul + etc the remainder.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import pim_model as pm
+from repro.core.workload_gen import model_metadata
+from .common import emit, timed
+
+
+def run():
+    rows = []
+    for name in ("mobilenetv2", "efficientnetb0"):
+        layers = CNN_MODELS[name]()
+        def point():
+            md = model_metadata(layers, 0.6, name, seed=0)
+            ours = pm.evaluate_model(layers, md)
+            total = ours.cycles
+            by_kind = {}
+            for layer, rep in zip(layers, ours.layers):
+                k = "pw/std/fc" if layer.kind in ("std", "pw", "fc") else layer.kind
+                by_kind[k] = by_kind.get(k, 0.0) + rep.cycles
+            return {k: v / total for k, v in by_kind.items()}
+        shares, us = timed(point)
+        desc = " ".join(f"{k}={v*100:.1f}%" for k, v in sorted(shares.items()))
+        rows.append((f"fig13.{name}", us, desc))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Fig. 3 — sparsity richness statistics.
+
+(a) proportion of zero bits in weights: original INT8, after 60% value
+    pruning, and after hybrid (60% value + FTA bit) pruning;
+(b) proportion of all-zero input bit columns for groups of 1 / 8 / 16.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import fta, pruning
+from repro.core.csd import PHI_TABLE
+from repro.core.pim_model import input_zero_col_fraction
+from repro.core.workload_gen import (MODEL_WEIGHT_STATS, synth_activation,
+                                     synth_quantized_weight)
+from .common import emit, timed
+
+
+def _zero_bit_frac(q: np.ndarray, mask=None) -> float:
+    """Fraction of zero CSD digits over all (kept) weights, zeros included."""
+    phi = PHI_TABLE[np.asarray(q, dtype=np.int32) - (-128)]
+    if mask is not None:
+        phi = phi * np.asarray(mask)
+    return float(1.0 - phi.sum() / (8.0 * phi.size))
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, (base_q, dead) in MODEL_WEIGHT_STATS.items():
+        layers = [l for l in CNN_MODELS[name]() if l.kind in ("std", "pw", "fc")]
+        big = max(layers, key=lambda l: l.K * l.N)
+        def stats():
+            q = synth_quantized_weight(big.K, big.N - big.N % 8 or 8,
+                                       base_q, rng, dead)
+            ori = _zero_bit_frac(q)
+            mask = np.asarray(pruning.block_prune_mask(
+                q.astype(np.float32), 0.6, 8))
+            val = _zero_bit_frac(q * mask)
+            q_fta, _ = fta.fta_quantize(q, mask)
+            ours = _zero_bit_frac(q_fta * mask)
+            return ori, val, ours
+        (ori, val, ours), us = timed(stats)
+        rows.append((f"fig3a.{name}", us,
+                     f"zero_bits ori={ori:.3f} val60={val:.3f} hybrid={ours:.3f}"))
+    # (b) all-zero input bit columns vs group size
+    acts = synth_activation(256, 1024, rng)
+    for g in (1, 8, 16):
+        frac, us = timed(input_zero_col_fraction, acts, g)
+        rows.append((f"fig3b.group{g}", us, f"zero_col_frac={frac:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Roofline table benchmark: all (arch x shape) baselines from the
+dry-run records (single-pod mesh, per the spec), CSV-emitted."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch.roofline import format_table, load_cells
+from .common import emit, timed
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    rows = []
+    if not DRYRUN_DIR.exists() or not list(DRYRUN_DIR.glob("*.json")):
+        rows.append(("roofline.missing", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+        return emit(rows)
+    cells, us = timed(load_cells, str(DRYRUN_DIR))
+    for c in cells:
+        if c.mesh != "single":
+            continue
+        name = f"roofline.{c.arch}.{c.shape}"
+        if c.status != "ok":
+            rows.append((name, 0.0, f"status={c.status}"))
+            continue
+        rows.append((name, us / max(len(cells), 1),
+                     f"compute_ms={c.compute_s*1e3:.3f} "
+                     f"memory_ms={c.memory_s*1e3:.3f} "
+                     f"collective_ms={c.collective_s*1e3:.3f} "
+                     f"bound={c.bottleneck} "
+                     f"useful_ratio={c.useful_ratio:.2f} "
+                     f"roofline_frac={c.roofline_fraction:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    print(format_table(load_cells(str(DRYRUN_DIR))))

@@ -1,0 +1,46 @@
+"""Tab. III — on-chip execution time (std/pw-conv + FC only): DAC'24 [16]
+configuration vs bit-level vs hybrid-level DB-PIM.
+
+The DAC'24 system is modeled as: bit-level weight sparsity only, no input
+bit-column skipping, no sparse allocation network, and half the
+filter-level parallelism (the journal version "expanded the architecture
+to increase computational parallelism", Sec. VII). Absolute ms use the
+500 MHz clock; the reproduction target is the RATIO structure
+(paper: up to 11.10x vs DAC'24; bit->hybrid ~1.4-1.7x).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import pim_model as pm
+from repro.core.workload_gen import model_metadata
+from .common import emit, timed
+
+ACCEL = ("std", "pw", "fc")
+
+
+def run():
+    rows = []
+    dac_cfg = dataclasses.replace(pm.DEFAULT_PIM, n_cores=4,
+                                  macros_per_core=2)
+    for name in CNN_MODELS:
+        layers = [l for l in CNN_MODELS[name]() if l.kind in ACCEL]
+        def point():
+            md = model_metadata(layers, 0.6, name, seed=0)
+            md_nv = model_metadata(layers, 0.0, name, seed=0)
+            dac = pm.evaluate_model(layers, md_nv, cfg=dac_cfg,
+                                    use_value=False, use_input_bit=False)
+            bit = pm.evaluate_model(layers, md_nv, use_value=False)
+            hyb = pm.evaluate_model(layers, md)
+            return (dac.time_ms(dac_cfg), bit.time_ms(), hyb.time_ms())
+        (t_dac, t_bit, t_hyb), us = timed(point)
+        rows.append((f"tab3.{name}", us,
+                     f"dac24_ms={t_dac:.3f} bit_ms={t_bit:.3f} "
+                     f"hybrid_ms={t_hyb:.3f} speedup_vs_dac={t_dac/t_hyb:.2f}x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,12 @@
+"""Batched serving example: continuous-batching decode over a fixed-slot
+batch (the TPU-efficient regime) on a Mixtral-family (MoE + SWA) model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    serve_main(["--arch", "mixtral-8x7b", "--reduced", "--batch", "4",
+                "--requests", "8", "--gen-len", "12", "--max-len", "64"])

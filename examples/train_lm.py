@@ -1,0 +1,43 @@
+"""End-to-end training driver example: train a ~100M-param TinyLlama-family
+model for a few hundred steps with checkpointing + fault tolerance.
+
+Full-size run (what you'd do on a pod; ~100M params):
+
+    PYTHONPATH=src python examples/train_lm.py --full
+
+CPU-container default: the reduced config, 200 steps (loss visibly drops).
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (d=768, 12L) instead of the smoke "
+                         "config; needs ~1h on this CPU container")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    if args.full:
+        # ~100M: override the reduced config via the registry's full
+        # config scaled down to 12 x 768 (vocab kept).
+        import repro.configs.tinyllama_1_1b as t
+        cfg = t.config().scaled(name="tinyllama-100m", n_layers=12,
+                                d_model=768, n_heads=12, n_kv_heads=4,
+                                d_ff=2048)
+        t.reduced_config = lambda: cfg  # serve it through --reduced
+        train_main(["--arch", "tinyllama-1.1b", "--reduced",
+                    "--steps", str(args.steps), "--batch", "8",
+                    "--seq", "512", "--microbatches", "2",
+                    "--ckpt-dir", "/tmp/repro_ckpt_100m"])
+    else:
+        train_main(["--arch", "tinyllama-1.1b", "--reduced",
+                    "--steps", str(args.steps), "--batch", "16",
+                    "--seq", "128", "--ckpt-dir", "/tmp/repro_ckpt_smoke"])
+
+
+if __name__ == "__main__":
+    main()

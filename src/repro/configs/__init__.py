@@ -1,0 +1,3 @@
+"""Architecture configs: the 10 assigned LM-family archs + the paper's CNNs."""
+
+from .registry import get_config, list_archs, ARCHS  # noqa: F401

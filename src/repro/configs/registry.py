@@ -1,0 +1,28 @@
+"""Registry of the 10 assigned architectures (filled in by arch modules)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS: List[str] = [
+    "qwen3-8b", "tinyllama-1.1b", "gemma-7b", "stablelm-1.6b",
+    "arctic-480b", "mixtral-8x7b", "mamba2-1.3b", "pixtral-12b",
+    "whisper-base", "jamba-v0.1-52b",
+]
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_")
+                            for a in ARCHS}
+
+
+def get_config(arch: str, reduced: bool = False):
+    """Load the ModelConfig for `arch`. reduced=True returns the small
+    smoke-test variant of the same family."""
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)

@@ -1,0 +1,3 @@
+"""DB-PIM core: the paper's algorithmic contribution, bit-true in JAX."""
+
+from . import csd, dyadic, fta, pruning, qat, hybrid  # noqa: F401

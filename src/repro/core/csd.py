@@ -1,0 +1,97 @@
+"""Canonical Signed Digit (CSD) encoding (Reitwiesner 1960).
+
+CSD is the minimal-weight non-adjacent form (NAF): every integer has a unique
+representation sum_i d_i 2^i with d_i in {-1, 0, +1} and d_i * d_{i+1} == 0.
+For INT8 values (range [-128, 127]) eight digit positions (0..7) always
+suffice: the highest NAF digit of |n| <= 128 sits at floor(log2(3*128/2)) = 7.
+
+All functions are vectorized over arbitrary leading axes and jit-compatible.
+Digit tensors use the trailing axis as the digit position (LSB first).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NDIGITS = 8
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def to_csd(x):
+    """Convert integers in [-128, 127] to CSD digits, shape x.shape + (8,).
+
+    Implements the NAF recurrence: z = 2 - (n mod 4) when n is odd else 0,
+    n <- (n - z) / 2. Works on jnp or np arrays (int32 internally).
+    """
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    n = xp.asarray(x, dtype=xp.int32)
+    digits = []
+    for _ in range(NDIGITS):
+        odd = n & 1
+        rem4 = n & 3
+        # odd: digit = +1 if n % 4 == 1 else -1 (n % 4 == 3)
+        z = xp.where(odd == 1, xp.where(rem4 == 1, 1, -1), 0).astype(xp.int32)
+        digits.append(z)
+        n = (n - z) >> 1
+    return xp.stack(digits, axis=-1)
+
+
+def from_csd(digits):
+    """Inverse of :func:`to_csd`. Accepts any trailing digit count."""
+    xp = jnp if isinstance(digits, jnp.ndarray) else np
+    d = xp.asarray(digits, dtype=xp.int32)
+    weights = (1 << xp.arange(d.shape[-1], dtype=xp.int32))
+    return xp.sum(d * weights, axis=-1)
+
+
+def csd_nonzero_count(x):
+    """phi(x): number of non-zero CSD digits of each element."""
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    return xp.sum(to_csd(x) != 0, axis=-1).astype(xp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Precomputed lookup tables over the full INT8 domain (tiny: 256 entries).
+# Index convention: table[v + 128] corresponds to the value v.
+# ---------------------------------------------------------------------------
+
+_DOMAIN = np.arange(INT8_MIN, INT8_MAX + 1, dtype=np.int32)          # (256,)
+CSD_DIGITS_TABLE = to_csd(_DOMAIN)                                   # (256, 8)
+PHI_TABLE = np.sum(CSD_DIGITS_TABLE != 0, axis=-1).astype(np.int32)  # (256,)
+
+
+def phi_lookup(x):
+    """phi(x) via table lookup — cheapest jittable form for INT8 inputs."""
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    table = jnp.asarray(PHI_TABLE) if xp is jnp else PHI_TABLE
+    idx = xp.asarray(x, dtype=xp.int32) - INT8_MIN
+    return table[idx]
+
+
+def verify_csd_properties(values=None):
+    """Check the three CSD invariants on a value set (defaults: full INT8).
+
+    Returns a dict of booleans; used by tests and by `benchmarks/fig3`.
+    """
+    if values is None:
+        values = _DOMAIN
+    values = np.asarray(values, dtype=np.int32)
+    digits = to_csd(values)
+    roundtrip = bool(np.all(from_csd(digits) == values))
+    adjacent = digits[..., 1:] * digits[..., :-1]
+    nonadjacent = bool(np.all(adjacent == 0))
+    # Minimal weight: CSD non-zero count never exceeds binary popcount
+    # (of the absolute value, the fair baseline for unsigned weight).
+    popcnt = np.array([bin(abs(int(v))).count("1") for v in values.ravel()])
+    minimal = bool(np.all(np.sum(digits != 0, axis=-1).ravel() <= np.maximum(popcnt, 1)))
+    return {"roundtrip": roundtrip, "nonadjacent": nonadjacent, "minimal": minimal}
+
+
+def mean_nonzero_reduction(bits: int = 8) -> float:
+    """Average reduction of non-zero digits vs two's complement (paper: ~33%)."""
+    vals = _DOMAIN
+    csd_nnz = PHI_TABLE.astype(np.float64)
+    twos = np.array([bin(int(v) & 0xFF).count("1") for v in vals], dtype=np.float64)
+    nz = twos > 0
+    return float(1.0 - csd_nnz[nz].sum() / twos[nz].sum())

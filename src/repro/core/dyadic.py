@@ -1,0 +1,101 @@
+"""Dyadic Block (DB) decomposition of CSD words.
+
+An 8-digit CSD word splits into four dyadic blocks DB#k = (digit_{2k+1},
+digit_{2k}). CSD non-adjacency guarantees each DB holds at most ONE non-zero
+digit, so every DB is either a
+
+  * Zero pattern:  (0, 0)                            -> not stored
+  * Comp pattern:  (0,±1) or (±1,0)                  -> one 6T cell (Q/Q-bar)
+
+A Comp pattern is fully described by (block index, hi/lo position, sign):
+value = sign * 2^(2*block + pos). DB-PIM stores only Comp patterns plus this
+metadata; this module is the bit-true "offline compilation" (Fig. 4) that
+produces them, and the exact reconstruction used by oracles and tests.
+
+Packed metadata layout (uint8 per term): bit0 = sign (1 => negative),
+bit1 = pos (hi/lo within block), bits2-3 = block index, bit4 = valid.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .csd import to_csd, NDIGITS
+
+NBLOCKS = NDIGITS // 2
+MAX_TERMS = 2  # FTA caps phi_th at 2 -> at most two Comp patterns per weight
+
+_SIGN_BIT = 0
+_POS_BIT = 1
+_BLK_SHIFT = 2
+_VALID_BIT = 4
+
+
+def dyadic_blocks(x):
+    """CSD digits regrouped as blocks: shape x.shape + (NBLOCKS, 2) (lo, hi)."""
+    d = to_csd(x)
+    return d.reshape(d.shape[:-1] + (NBLOCKS, 2))
+
+
+def classify_blocks(x):
+    """Per-block pattern class: 0 = Zero pattern, 1 = Comp pattern.
+
+    Raises (via returned `ok` flag) if any block held two non-zero digits,
+    which CSD non-adjacency forbids.
+    """
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    blk = dyadic_blocks(x)
+    nnz = xp.sum(blk != 0, axis=-1)
+    return (nnz > 0).astype(xp.int32), bool((np.asarray(nnz) <= 1).all())
+
+
+def pack_terms(x, max_terms: int = MAX_TERMS):
+    """Compress INT8 weights to (sign, position) Comp-pattern metadata.
+
+    Returns uint8 array of shape x.shape + (max_terms,). Terms are ordered
+    from the most significant block down. Weights with more than `max_terms`
+    Comp patterns are an error for FTA-projected tensors; here extra terms
+    are dropped (callers that need exactness must pre-project with FTA).
+    """
+    x = np.asarray(x, dtype=np.int32)
+    blk = np.asarray(dyadic_blocks(x))                       # (..., 4, 2)
+    # Per block: the single non-zero digit (non-adjacency => at most one).
+    lo, hi = blk[..., 0], blk[..., 1]
+    digit = np.where(hi != 0, hi, lo)                        # (..., 4)
+    pos = (hi != 0).astype(np.int32)
+    valid = (digit != 0)
+    enc = ((1 << _VALID_BIT)
+           | (np.arange(NBLOCKS, dtype=np.int32) << _BLK_SHIFT)
+           | (pos << _POS_BIT)
+           | (digit < 0).astype(np.int32)).astype(np.uint8)
+    # Order blocks MSB-first and select the first `max_terms` valid ones.
+    enc_m = enc[..., ::-1]
+    valid_m = valid[..., ::-1]
+    rank = np.cumsum(valid_m, axis=-1)                       # 1-based rank
+    out = np.zeros(x.shape + (max_terms,), dtype=np.uint8)
+    for t in range(max_terms):
+        sel = valid_m & (rank == t + 1)                      # one-hot block
+        out[..., t] = np.sum(enc_m * sel, axis=-1).astype(np.uint8)
+    return out
+
+
+def unpack_terms(packed):
+    """Exact integer reconstruction from packed Comp-pattern metadata."""
+    p = np.asarray(packed, dtype=np.int32)
+    valid = (p >> _VALID_BIT) & 1
+    sign = 1 - 2 * (p & 1)
+    pos = (p >> _POS_BIT) & 1
+    blk = (p >> _BLK_SHIFT) & 3
+    vals = valid * sign * (1 << (2 * blk + pos))
+    return np.sum(vals, axis=-1).astype(np.int32)
+
+
+def comp_pattern_stats(x):
+    """(n_comp_blocks, n_zero_blocks, comp_fraction) over a tensor — feeds
+    the U_act computation: DB-PIM stores exactly the Comp blocks."""
+    cls, ok = classify_blocks(np.asarray(x))
+    assert ok, "CSD non-adjacency violated (impossible for valid CSD)"
+    n_comp = int(np.sum(cls))
+    n_total = int(cls.size)
+    return n_comp, n_total - n_comp, n_comp / max(n_total, 1)

@@ -1,0 +1,108 @@
+"""Fixed-Threshold Approximation (FTA) — Alg. 1 of the paper, vectorized.
+
+Per filter (output channel):
+  1. phi(w) = CSD non-zero digit count of each (already INT8-quantized) weight.
+  2. m = mode of phi over *unmasked* weights (mask==0 weights were removed by
+     coarse block pruning and are excluded).
+  3. Threshold rule:  all-zero filter -> 0;  m==0 -> 1;  1<=m<=2 -> m;
+     m>2 -> 2  (phi_th is capped at 2 so metadata stays within 8 bits/weight).
+  4. Re-project every unmasked weight to the nearest value in
+     T(phi_th) = { t in INT8 : phi(t) == phi_th }  (exactly phi_th digits —
+     the paper's example maps an unpruned literal 0 to 1 under phi_th=1).
+     Masked weights stay 0.
+
+Everything is expressed over the 256-entry INT8 domain, so both the
+threshold decision and the projection are pure table lookups: jittable,
+differentiable-through via STE at the QAT layer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .csd import PHI_TABLE, INT8_MIN, INT8_MAX
+
+MAX_PHI_TH = 2
+DOMAIN = np.arange(INT8_MIN, INT8_MAX + 1, dtype=np.int32)
+
+
+def threshold_table(phi_th: int) -> np.ndarray:
+    """T(phi_th): all INT8 values with exactly phi_th non-zero CSD digits."""
+    return DOMAIN[PHI_TABLE == phi_th]
+
+
+def _build_projection_lut() -> np.ndarray:
+    """LUT[phi_th, v+128] = nearest element of T(phi_th) to v.
+
+    Ties resolve toward the larger value — the paper's walkthrough projects
+    an unpruned 0 to +1 under phi_th=1. Shape (MAX_PHI_TH+1, 256), int32.
+    """
+    lut = np.zeros((MAX_PHI_TH + 1, DOMAIN.size), dtype=np.int32)
+    for phi in range(MAX_PHI_TH + 1):
+        tbl = threshold_table(phi)
+        dist = np.abs(DOMAIN[None, :] - tbl[:, None])        # (|T|, 256)
+        idx = dist.shape[0] - 1 - np.argmin(dist[::-1], axis=0)
+        lut[phi] = tbl[idx]
+    return lut
+
+
+PROJECTION_LUT = _build_projection_lut()
+
+
+def compute_thresholds(q_weights, mask):
+    """phi_th per filter. `q_weights` int32 (..., K, N), filters on last axis.
+
+    mask: same shape, 1 = kept by coarse pruning, 0 = pruned. Returns int32
+    (..., N). jnp or np in, same kind out.
+    """
+    xp = jnp if isinstance(q_weights, jnp.ndarray) else np
+    w = xp.asarray(q_weights, dtype=xp.int32)
+    m = xp.asarray(mask, dtype=xp.int32)
+    phi_tab = jnp.asarray(PHI_TABLE) if xp is jnp else PHI_TABLE
+    phi = phi_tab[w - INT8_MIN] * m                          # masked -> 0
+    # Mode over the filter (K) axis, counting only unmasked entries.
+    # counts[c, ...] = #{k : unmasked and phi == c}, c in 0..8.
+    counts = xp.stack([xp.sum((phi == c) & (m == 1), axis=-2)
+                       for c in range(9)])                    # (9, ..., N)
+    mode = xp.argmax(counts, axis=0).astype(xp.int32)        # ties -> smaller
+    any_unmasked = xp.sum(m, axis=-2) > 0
+    all_zero = xp.sum(xp.abs(w) * m, axis=-2) == 0
+    th = xp.where(mode == 0, 1, xp.minimum(mode, MAX_PHI_TH))
+    th = xp.where(all_zero | ~any_unmasked, 0, th)
+    return th.astype(xp.int32)
+
+
+def project(q_weights, mask, phi_th):
+    """Nearest-in-T(phi_th) projection. Masked weights forced to 0.
+
+    q_weights int (..., K, N); phi_th int (..., N) broadcast over K.
+    """
+    xp = jnp if isinstance(q_weights, jnp.ndarray) else np
+    w = xp.asarray(q_weights, dtype=xp.int32)
+    m = xp.asarray(mask, dtype=xp.int32)
+    lut = jnp.asarray(PROJECTION_LUT) if xp is jnp else PROJECTION_LUT
+    th = xp.asarray(phi_th, dtype=xp.int32)[..., None, :]    # (...,1,N)
+    th = xp.broadcast_to(th, w.shape)
+    proj = lut[th, w - INT8_MIN]
+    # phi_th == 0 projects everything to 0 already (T(0) == {0}).
+    return proj * m
+
+
+def fta_quantize(q_weights, mask):
+    """Full Alg. 1: thresholds + projection. Returns (w_fta, phi_th)."""
+    th = compute_thresholds(q_weights, mask)
+    return project(q_weights, mask, th), th
+
+
+def achieved_bit_sparsity(w_fta, mask=None):
+    """Fraction of zero CSD digits among stored (unmasked) weights — the
+    paper's 'bit-level sparsity' (>= 75% guaranteed when phi_th <= 2)."""
+    w = np.asarray(w_fta, dtype=np.int32)
+    phi = PHI_TABLE[w - INT8_MIN]
+    if mask is not None:
+        keep = np.asarray(mask) == 1
+        phi = phi[keep]
+    if phi.size == 0:
+        return 1.0
+    return float(1.0 - phi.sum() / (8.0 * phi.size))

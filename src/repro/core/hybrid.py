@@ -1,0 +1,92 @@
+"""Hybrid-grained pruning pipeline (Fig. 4): the paper's three stages as a
+reusable driver over arbitrary weight pytrees.
+
+  stage 1  coarse-grained block-wise pruning  -> masks
+  stage 2  FTA-aware QAT                      -> EMA scales + projected weights
+  stage 3  final FTA quantization             -> FTAExport (q, scale, phi_th,
+                                                 mask) + packed DB metadata
+
+The driver is model-agnostic: it operates on a dict of 2-D weight matrices
+(K, N) — callers flatten conv kernels via im2col-style reshape (Kh*Kw*Cin, Cout)
+and LM projections directly as (d_in, d_out).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import pruning, qat, fta, dyadic
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    value_sparsity: float = 0.6        # coarse block-prune ratio
+    alpha: int = pruning.DEFAULT_ALPHA
+    ema_decay: float = 0.99
+    # Layers can opt out (paper: dw-conv / routers are left dense).
+    exclude: tuple = ()
+
+
+def prune_tree(weights: Dict[str, jnp.ndarray], cfg: HybridConfig):
+    """Stage 1: masks for every eligible tensor (others get all-ones)."""
+    masks = {}
+    for name, w in weights.items():
+        if name in cfg.exclude or w.ndim != 2 or w.shape[-1] % cfg.alpha:
+            masks[name] = jnp.ones_like(w, dtype=jnp.int32)
+        else:
+            masks[name] = pruning.block_prune_mask(w, cfg.value_sparsity,
+                                                   cfg.alpha)
+    return masks
+
+
+def qat_step(weights, masks, ema_states, cfg: HybridConfig):
+    """Stage 2 inner step: update EMA ranges, return FTA-projected fake-quant
+    weights (STE) for the forward pass + new EMA states + thresholds."""
+    new_states, w_fq, phi = {}, {}, {}
+    for name, w in weights.items():
+        st = ema_states.get(name) or qat.ema_init()
+        st = qat.ema_update(st, w)
+        new_states[name] = st
+        if name in cfg.exclude:
+            w_fq[name] = w
+            phi[name] = None
+            continue
+        scale = qat.scale_of(st)
+        w_fq[name], phi[name] = qat.fta_fake_quant(w, masks[name], scale)
+    return w_fq, new_states, phi
+
+
+def export_tree(weights, masks, ema_states, cfg: HybridConfig):
+    """Stage 3: final FTA quantization + DB metadata packing per tensor."""
+    out = {}
+    for name, w in weights.items():
+        if name in cfg.exclude:
+            continue
+        scale = qat.scale_of(ema_states[name])
+        exp = qat.fta_export(w, masks[name], scale)
+        packed = dyadic.pack_terms(np.asarray(exp.q))
+        out[name] = {"export": exp, "packed_terms": packed}
+    return out
+
+
+def sparsity_report(exports) -> Dict[str, dict]:
+    """Per-tensor compound sparsity stats — feeds the PIM cost model."""
+    rep = {}
+    for name, e in exports.items():
+        exp = e["export"]
+        mask = np.asarray(exp.mask)
+        q = np.asarray(exp.q)
+        v_s = pruning.value_sparsity(mask)
+        b_s = fta.achieved_bit_sparsity(q, mask)
+        rep[name] = {
+            "value_sparsity": v_s,
+            "bit_sparsity": b_s,
+            "compound_sparsity": 1 - (1 - v_s) * (1 - b_s),
+            "phi_th_hist": np.bincount(np.asarray(exp.phi_th), minlength=3)
+                             .tolist(),
+        }
+    return rep

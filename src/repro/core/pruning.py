@@ -1,0 +1,78 @@
+"""Coarse-grained block-wise value pruning (Sec. IV-C-1).
+
+The weight matrix W (K, N) — K = reduction dim (rows of the PIM array),
+N = filters/output channels (columns) — is partitioned into non-overlapping
+1 x alpha blocks: the weights at the SAME reduction position k across alpha
+consecutive filters. alpha = 8 in the paper (set by the macro column group /
+FTA threshold). Blocks are ranked by L2 norm; the lowest `sparsity` fraction
+is zeroed. Masks are per-layer artifacts consumed by the sparse allocation
+network (hardware) and by the block-sparse Pallas kernel (TPU).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+DEFAULT_ALPHA = 8
+
+
+def block_l2_norms(w, alpha: int = DEFAULT_ALPHA):
+    """L2 norm per (k, n-block). w: (..., K, N) with N % alpha == 0.
+
+    Returns (..., K, N // alpha).
+    """
+    xp = jnp if isinstance(w, jnp.ndarray) else np
+    w = xp.asarray(w)
+    K, N = w.shape[-2], w.shape[-1]
+    assert N % alpha == 0, f"N={N} not divisible by alpha={alpha}"
+    blocks = w.reshape(w.shape[:-2] + (K, N // alpha, alpha))
+    return xp.sqrt(xp.sum(blocks.astype(xp.float32) ** 2, axis=-1))
+
+
+def block_prune_mask(w, sparsity: float, alpha: int = DEFAULT_ALPHA):
+    """Mask (same shape as w) with the lowest-L2 `sparsity` of blocks zeroed.
+
+    The threshold is the per-layer quantile of block norms (paper: sort and
+    cut at the sparsity level). Exactly floor(sparsity * nblocks) blocks are
+    pruned (ties broken by stable argsort), so the ratio is exact.
+    """
+    xp = jnp if isinstance(w, jnp.ndarray) else np
+    norms = block_l2_norms(w, alpha)                          # (..., K, B)
+    flat = norms.reshape(norms.shape[:-2] + (-1,))
+    nblk = flat.shape[-1]
+    k_prune = int(np.floor(float(sparsity) * nblk))
+    if k_prune == 0:
+        block_mask = xp.ones_like(flat, dtype=xp.int32)
+    else:
+        order = xp.argsort(flat, axis=-1, stable=True)
+        ranks = xp.argsort(order, axis=-1, stable=True)
+        block_mask = (ranks >= k_prune).astype(xp.int32)
+    block_mask = block_mask.reshape(norms.shape)              # (..., K, B)
+    mask = xp.repeat(block_mask[..., None], alpha, axis=-1)
+    return mask.reshape(w.shape)
+
+
+def apply_mask(w, mask):
+    xp = jnp if isinstance(w, jnp.ndarray) else np
+    return w * xp.asarray(mask, dtype=w.dtype)
+
+
+def value_sparsity(mask) -> float:
+    m = np.asarray(mask)
+    return float(1.0 - m.sum() / m.size)
+
+
+def surviving_block_indices(mask, alpha: int = DEFAULT_ALPHA):
+    """Per filter-group: indices of surviving K rows — consumed by the
+    sparse allocation network model and the block-sparse kernel packer.
+
+    mask: (K, N). Returns list over N//alpha groups of int32 arrays (rows kept).
+    """
+    m = np.asarray(mask)
+    K, N = m.shape
+    out = []
+    for g in range(N // alpha):
+        blk = m[:, g * alpha:(g + 1) * alpha]
+        out.append(np.nonzero(blk.any(axis=1))[0].astype(np.int32))
+    return out

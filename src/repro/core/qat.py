@@ -1,0 +1,93 @@
+"""FTA-aware Quantization-Aware Training (Sec. III / IV-C-2).
+
+Pieces:
+  * dynamic min-max range tracking with EMA smoothing (no trainable params,
+    no precomputed global ranges — per the paper),
+  * symmetric INT8 fake-quant with straight-through-estimator gradients,
+  * the FTA projection folded into the forward pass (weights are projected to
+    their nearest T(phi_th) value every step, STE through the projection),
+  * final FTA quantization (export to true INT8 + scale + metadata).
+
+State is plain pytrees; no framework dependency.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fta
+from .csd import INT8_MAX
+
+
+class EMARange(NamedTuple):
+    """EMA-smoothed dynamic range observer state."""
+    amax: jnp.ndarray   # scalar, smoothed max |x|
+    decay: float = 0.99
+    initialized: jnp.ndarray = jnp.zeros(())  # 0. until first update
+
+
+def ema_init() -> EMARange:
+    return EMARange(amax=jnp.ones(()), initialized=jnp.zeros(()))
+
+
+def ema_update(state: EMARange, x: jnp.ndarray) -> EMARange:
+    cur = jnp.max(jnp.abs(x)).astype(jnp.float32) + 1e-8
+    new = jnp.where(state.initialized > 0,
+                    state.decay * state.amax + (1 - state.decay) * cur,
+                    cur)
+    return EMARange(amax=new, decay=state.decay,
+                    initialized=jnp.ones(()))
+
+
+def scale_of(state: EMARange) -> jnp.ndarray:
+    return state.amax / INT8_MAX
+
+
+def _ste(x_fq: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward = x_fq, backward = identity."""
+    return x + jax.lax.stop_gradient(x_fq - x)
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int32)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Plain symmetric INT8 fake-quant with STE (inputs/activations)."""
+    return _ste(quantize_int8(x, scale).astype(x.dtype) * scale, x)
+
+
+def fta_fake_quant(w: jnp.ndarray, mask: jnp.ndarray, scale: jnp.ndarray):
+    """FTA-aware weight fake-quant (the per-epoch projection of Fig. 4).
+
+    w: float (K, N) [filters last]; mask: block-prune mask. Returns
+    (w_fq float with STE, phi_th (N,)) — w_fq values lie exactly on the
+    scale * T(phi_th) grid so the final FTA quantization is lossless.
+    """
+    q = quantize_int8(w, scale)
+    q_fta, phi_th = fta.fta_quantize(q, mask)
+    w_fq = q_fta.astype(w.dtype) * scale
+    return _ste(w_fq * mask.astype(w.dtype), w * mask.astype(w.dtype)), phi_th
+
+
+class FTAExport(NamedTuple):
+    """Final FTA quantization artifact (Sec. IV-C-3) for one weight tensor."""
+    q: jnp.ndarray        # int32 (K, N) FTA-compliant INT8 values
+    scale: jnp.ndarray    # scalar dequant scale
+    phi_th: jnp.ndarray   # (N,) per-filter thresholds
+    mask: jnp.ndarray     # (K, N) coarse block-prune mask
+
+
+def fta_export(w: jnp.ndarray, mask: jnp.ndarray, scale: jnp.ndarray) -> FTAExport:
+    q = quantize_int8(w, scale)
+    q_fta, phi_th = fta.fta_quantize(q, mask)
+    return FTAExport(q=q_fta, scale=scale, phi_th=phi_th,
+                     mask=mask.astype(jnp.int32))
+
+
+def dequant(exp: FTAExport) -> jnp.ndarray:
+    return exp.q.astype(jnp.float32) * exp.scale

@@ -1,0 +1,71 @@
+"""jit'd wrappers + packing utilities for the Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dyadic, fta, pruning, qat
+from .block_sparse_matmul import BK, BN, block_sparse_matmul
+from .dbmu_sim import dbmu_matmul
+from .fta_int8_matmul import fta_int8_matmul
+
+
+def pack_block_sparse(w_dense: np.ndarray, mask: np.ndarray,
+                      bk: int = BK, bn: int = BN):
+    """Compact a masked weight matrix into gathered K-blocks per N tile.
+
+    Returns (w_blocks (NT, MAXB, bk, bn), idx (NT, MAXB) int32). A K-block
+    survives for an N tile iff any weight in the (bk, bn) tile is kept.
+    MAXB = max surviving blocks over tiles (zero-padded elsewhere).
+    """
+    w = np.asarray(w_dense) * np.asarray(mask)
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0
+    kt, nt = K // bk, N // bn
+    tiles = w.reshape(kt, bk, nt, bn)
+    alive = np.abs(tiles).sum(axis=(1, 3)) > 0          # (kt, nt)
+    maxb = max(int(alive.sum(axis=0).max()), 1)
+    w_blocks = np.zeros((nt, maxb, bk, bn), w.dtype)
+    idx = np.zeros((nt, maxb), np.int32)
+    for n in range(nt):
+        rows = np.nonzero(alive[:, n])[0]
+        for b, kblk in enumerate(rows):
+            w_blocks[n, b] = tiles[kblk, :, n, :]
+            idx[n, b] = kblk
+    return jnp.asarray(w_blocks), jnp.asarray(idx)
+
+
+def sparse_dense(x, w_blocks, idx, interpret: bool = True):
+    """Public op: block-sparse y = x @ W for 2D/3D activations."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = block_sparse_matmul(x2, w_blocks, idx, interpret=interpret)
+    return y.reshape(shape[:-1] + (y.shape[-1],))
+
+
+def fta_pack(w: jnp.ndarray, mask, value_sparsity: float = 0.0):
+    """Full DB-PIM weight compilation: block prune -> FTA quantize ->
+    (int8 qweights, scale, packed dyadic terms)."""
+    scale = jnp.max(jnp.abs(w)) / 127.0
+    q = qat.quantize_int8(w, scale)
+    q_fta, phi = fta.fta_quantize(q, mask)
+    packed = dyadic.pack_terms(np.asarray(q_fta))
+    return q_fta.astype(jnp.int8), scale, packed, phi
+
+
+def fta_dense(x, w_q, scales, interpret: bool = True):
+    """Public op: y = x @ (int8 FTA weights x per-filter scales)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = fta_int8_matmul(x2, w_q, scales, interpret=interpret)
+    return y.reshape(shape[:-1] + (y.shape[-1],))
+
+
+def dbmu_reference_check(x_int8, packed, interpret: bool = True):
+    """Run the bit-true DBMU datapath."""
+    return dbmu_matmul(jnp.asarray(x_int8, jnp.int32),
+                       jnp.asarray(packed), interpret=interpret)

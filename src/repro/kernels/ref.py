@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every kernel in this package."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dyadic import unpack_terms
+
+
+def block_sparse_matmul_ref(x, w_dense, mask):
+    """Oracle for block_sparse_matmul: dense matmul with the pruned W."""
+    return x @ (w_dense * mask.astype(w_dense.dtype))
+
+
+def fta_int8_matmul_ref(x, w_q, scales, out_dtype=jnp.bfloat16):
+    """Oracle for fta_int8_matmul."""
+    w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def dbmu_matmul_ref(x_int8, packed):
+    """Oracle for dbmu_sim: integer matmul against the unpacked weights."""
+    w = unpack_terms(np.asarray(packed))              # (K, N) int32
+    return np.asarray(x_int8, np.int64) @ w.astype(np.int64)

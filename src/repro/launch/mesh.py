@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; smoke tests and benchmarks see the real single
+device and use `make_test_mesh`.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh() -> Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,126 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Wires together: config -> params -> sharded train step (grad accumulation,
+AdamW + cosine schedule, optional INT8 optimizer state and gradient
+compression) -> synthetic data pipeline -> async checkpointing ->
+straggler monitor -> resilient restart loop. On the CPU container use
+--reduced; on a pod the same flags drive the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset, make_pipeline
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.steps import build_train_step
+from repro.models import init_params
+from repro.optim import adamw_init
+from repro.runtime import sharding as shr
+from repro.runtime.fault import StragglerMonitor
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--int8-opt", action="store_true")
+    ap.add_argument("--dbpim-every", type=int, default=0,
+                    help="every N steps, project weights to the DB-PIM "
+                         "FTA grid (hybrid-grained pruning, Fig. 4 stage "
+                         "2) — train the compressed model in the loop")
+    ap.add_argument("--dbpim-value-sparsity", type=float, default=0.0)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_test_mesh())
+    print(f"[train] {cfg.name}: mesh={dict(mesh.shape)} "
+          f"devices={len(jax.devices())}")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params, int8_state=args.int8_opt)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"[train] params: {n_params/1e6:.1f}M")
+
+    step_fn, shard_fn = build_train_step(
+        cfg, mesh, microbatches=args.microbatches,
+        grad_compression=args.grad_compression)
+    ds = SyntheticLMDataset(cfg, args.batch, args.seq, seed=args.seed)
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        restored = ckpt.restore_or_none((params, opt_state))
+        if restored is not None:
+            (params, opt_state), start_step, _ = restored
+            params = jax.tree_util.tree_map(jax.numpy.asarray, params)
+            opt_state = jax.tree_util.tree_map(jax.numpy.asarray, opt_state)
+            print(f"[train] resumed from step {start_step}")
+
+    with mesh:
+        batch0 = ds.batch_at(start_step)
+        pspec, ospec, bspec = shard_fn(params, opt_state, batch0)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(shr.named(pspec, mesh),
+                                       shr.named(ospec, mesh),
+                                       shr.named(bspec, mesh)),
+                         donate_argnums=(0, 1))
+        mon = StragglerMonitor()
+        losses = []
+        pipe = make_pipeline(ds, start_step)
+        for step in range(start_step, args.steps):
+            batch = next(pipe)
+            t0 = time.time()
+            params, opt_state, loss = jitted(params, opt_state, batch)
+            loss_v = float(loss)
+            dt = time.time() - t0
+            losses.append(loss_v)
+            if mon.record(dt):
+                print(f"[train] step {step}: straggler ({dt:.2f}s vs "
+                      f"p50 {mon.p50:.2f}s)")
+            if step % args.log_every == 0:
+                print(f"[train] step {step}: loss={loss_v:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if args.dbpim_every and (step + 1) % args.dbpim_every == 0:
+                # FTA-aware training: periodic projection of every
+                # eligible projection onto the FTA-compliant INT8 grid
+                # (the paper applies it per epoch; STE == projected
+                # weights keep training between projections).
+                from repro.sparsity import dequant_tree, sparsify_params
+                comp = sparsify_params(
+                    params, cfg, value_sparsity=args.dbpim_value_sparsity)
+                params = dequant_tree(params, comp)
+            if ckpt:
+                ckpt.maybe_save(step + 1, (params, opt_state),
+                                extra={"loss": loss_v})
+        if ckpt:
+            ckpt.wait()
+    print(f"[train] done: first loss {losses[0]:.4f} -> "
+          f"last loss {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

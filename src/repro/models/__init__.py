@@ -1,0 +1,5 @@
+"""Unified model zoo for the 10 assigned architectures."""
+
+from .config import ModelConfig, ShapeSpec, SHAPES, param_count  # noqa: F401
+from .transformer import init_params, forward, loss_fn, encode  # noqa: F401
+from .decode import decode_step, init_cache, prefill  # noqa: F401

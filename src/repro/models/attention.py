@@ -1,0 +1,212 @@
+"""Attention: GQA / MQA / MHA with RoPE, qk-norm, sliding windows (SWA),
+cross-attention, and a static-shape KV cache for prefill/decode.
+
+Shapes: x (B, S, D); q (B, S, Hq, hd); k/v (B, S, Hkv, hd).
+Cache: {"k","v"} (B, S_max, Hkv, hd) + integer write index.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dtype_of, rms_head_norm, rope_frequencies
+from repro.runtime.act_sharding import constrain
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {"wq": (jax.random.normal(k1, (d, cfg.q_dim)) * s).astype(dt),
+         "wk": (jax.random.normal(k2, (d, cfg.kv_dim)) * s).astype(dt),
+         "wv": (jax.random.normal(k3, (d, cfg.kv_dim)) * s).astype(dt),
+         "wo": (jax.random.normal(k4, (cfg.q_dim, d))
+                * cfg.q_dim ** -0.5).astype(dt)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q (B,Sq,H,hd), k/v (B,Skv,H,hd), mask broadcast (B,1,Sq,Skv)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+CHUNKED_ATTN_THRESHOLD = 16384
+
+
+def _chunked_sdpa(q, k, v, cfg: ModelConfig, dtype, chunk: int = 2048):
+    """Flash-style two-level blocked attention with online softmax.
+
+    Never materializes (S, S): outer scan over query chunks, inner scan
+    over key chunks with running (max, sum, acc). Causal masking at block
+    granularity (upper-triangular blocks are masked, not skipped — the 2x
+    block waste is a recorded §Perf item). q/k/v: (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    nq = S // chunk
+    scale = hd ** -0.5
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk, H, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nq, chunk, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nq, chunk, H, hd), 1, 0)
+
+    base = jnp.arange(chunk)
+
+    def q_block(_, qi_q):
+        qi, qb = qi_q
+        qpos = qi * chunk + base
+
+        def kv_block(carry, kj_kv):
+            m_prev, l_prev, acc = carry
+            kj, kb, vb = kj_kv
+            kpos = kj * chunk + base
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            s = s * scale
+            mask = kpos[None, :] <= qpos[:, None]
+            if cfg.window:
+                mask &= kpos[None, :] > qpos[:, None] - cfg.window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(dtype), vb)
+            acc = acc * corr[..., None].astype(dtype) + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, chunk, hd), dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(nq), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(dtype)
+        return None, jnp.moveaxis(out, 1, 2)        # (B, chunk, H, hd)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, S, H, hd)
+
+
+def causal_mask(sq: int, skv: int, window: int = 0):
+    """(1, 1, sq, skv) bool; offsets assume q positions are the last sq of
+    skv (prefill: sq == skv)."""
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attention(p, x, cfg: ModelConfig, positions, causal: bool = True,
+              dense_fn=None):
+    """Full-sequence attention (training / encoder). positions (B, S)."""
+    mm = dense_fn or (lambda w, v, name: v @ w)
+    B, S, _ = x.shape
+    q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
+    k = _split_heads(mm(p["wk"], x, "wk"), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(mm(p["wv"], x, "wv"), cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope_pct > 0:
+        cos, sin = rope_frequencies(cfg, positions)
+        q = apply_rope(q, cos, sin, cfg)
+        k = apply_rope(k, cos, sin, cfg)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    if causal and S >= CHUNKED_ATTN_THRESHOLD and S % 2048 == 0:
+        out = _chunked_sdpa(q, k, v, cfg, x.dtype)
+    else:
+        if causal:
+            mask = causal_mask(S, S, cfg.window)
+        else:
+            mask = jnp.ones((1, 1, S, S), bool)
+        out = _sdpa(q, k, v, mask, x.dtype)
+    return mm(p["wo"], out.reshape(B, S, cfg.q_dim), "wo")
+
+
+def cross_attention(p, x, enc_out, cfg: ModelConfig, dense_fn=None):
+    """Decoder cross-attention over encoder output (whisper)."""
+    mm = dense_fn or (lambda w, v, name: v @ w)
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
+    k = _split_heads(mm(p["wk"], enc_out, "wk"), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(mm(p["wv"], enc_out, "wv"), cfg.n_kv_heads, cfg.hd)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    mask = jnp.ones((1, 1, S, Se), bool)
+    out = _sdpa(q, k, v, mask, x.dtype)
+    return mm(p["wo"], out.reshape(B, S, cfg.q_dim), "wo")
+
+
+# ------------------------------------------------------------- cache -------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    """Stacked KV cache for a layer stack. SWA archs allocate only the
+    window (ring buffer) — that is what makes long_500k decode O(window)."""
+    dt = dtype_of(cfg)
+    alloc = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (n_layers, batch, alloc, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     dense_fn=None):
+    """Single-token decode against one layer's cache slice.
+
+    x (B, 1, D); cache_k/v (B, A, Hkv, hd) with A = alloc len; pos = number
+    of tokens already in the cache. Returns (out, new_k, new_v).
+    """
+    mm = dense_fn or (lambda w, v, name: v @ w)
+    B = x.shape[0]
+    A = cache_k.shape[1]
+    q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
+    k = _split_heads(mm(p["wk"], x, "wk"), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(mm(p["wv"], x, "wv"), cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope_pct > 0:
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        cos, sin = rope_frequencies(cfg, posv)
+        q = apply_rope(q, cos, sin, cfg)
+        k = apply_rope(k, cos, sin, cfg)
+    slot = jnp.mod(pos, A) if cfg.window else jnp.minimum(pos, A - 1)
+    new_k = cache_k.at[:, slot].set(k[:, 0])
+    new_v = cache_v.at[:, slot].set(v[:, 0])
+    kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
+    vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
+    kpos = jnp.arange(A)
+    if cfg.window:
+        valid = (kpos <= slot) | (pos >= A)    # ring buffer: all valid once full
+    else:
+        valid = kpos <= pos
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, kk, vv, mask, x.dtype)
+    return mm(p["wo"], out.reshape(B, 1, cfg.q_dim), "wo"), new_k, new_v

@@ -1,0 +1,159 @@
+"""Serving path: cache init, prefill, and single-token decode for every
+family (dense/MoE/VLM, SSM, hybrid, enc-dec).
+
+Decode scans over the stacked layer params with the per-layer cache slices
+as scan inputs/outputs, so the HLO is O(1) in depth. Caches are static-
+shape; SWA archs allocate only the window (ring buffer).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, embed_tokens, logits_from_hidden)
+from .transformer import _sinusoidal, encode
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_out: Optional[jnp.ndarray] = None) -> Dict:
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        cache["attn"] = attn_mod.init_cache(cfg, batch, max_len, n_periods)
+        cache["ssm"] = ssm_mod.init_ssm_cache(
+            cfg, batch, n_periods * (cfg.attn_period - 1))
+        # reshape ssm stacks to (n_periods, period-1, ...)
+        cache["ssm"] = jax.tree_util.tree_map(
+            lambda t: t.reshape((n_periods, cfg.attn_period - 1)
+                                + t.shape[1:]), cache["ssm"])
+    else:
+        cache["attn"] = attn_mod.init_cache(cfg, batch, max_len, cfg.n_layers)
+    if cfg.is_encdec and enc_out is not None:
+        cache["enc_out"] = enc_out
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """token (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], token, cfg)
+    if cfg.rope_pct == 0:
+        # sinusoidal position embedding at position `pos`
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos.astype(jnp.float32) / (10000.0 ** (dim / d))
+        pe = jnp.zeros((1, d), jnp.float32)
+        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe[None].astype(x.dtype)
+
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        def step(h, inp):
+            p, conv, state = inp
+            hn = apply_norm(p["norm1"], h, cfg)
+            y, new_conv, new_state = ssm_mod.decode_ssm(
+                p["ssm"], hn, conv, state, cfg)
+            return h + y, (new_conv, new_state)
+        x, (convs, states) = jax.lax.scan(
+            step, x, (params["blocks"], cache["ssm"]["conv"],
+                      cache["ssm"]["state"]))
+        new_cache["ssm"] = {"conv": convs, "state": states}
+
+    elif cfg.family == "hybrid":
+        def step(h, inp):
+            p, ck, cv, convs, states = inp
+            new_convs, new_states = [], []
+            ssm_i = 0
+            for i in range(cfg.attn_period):
+                sub = p[f"sub{i}"]
+                hn = apply_norm(sub["norm1"], h, cfg)
+                if i == cfg.attn_index:
+                    y, ck, cv = attn_mod.decode_attention(
+                        sub["attn"], hn, ck, cv, pos, cfg)
+                else:
+                    y, nc, ns = ssm_mod.decode_ssm(
+                        sub["ssm"], hn, convs[ssm_i], states[ssm_i], cfg)
+                    new_convs.append(nc)
+                    new_states.append(ns)
+                    ssm_i += 1
+                h = h + y
+                hn2 = apply_norm(sub["norm2"], h, cfg)
+                if "moe" in sub:
+                    y2, _ = moe_mod.apply_moe_block(sub["moe"], hn2, cfg)
+                else:
+                    y2 = apply_mlp(sub["mlp"], hn2, cfg)
+                h = h + y2
+            return h, (ck, cv, jnp.stack(new_convs), jnp.stack(new_states))
+        x, (cks, cvs, convs, states) = jax.lax.scan(
+            step, x, (params["periods"], cache["attn"]["k"],
+                      cache["attn"]["v"], cache["ssm"]["conv"],
+                      cache["ssm"]["state"]))
+        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
+        new_cache["ssm"] = {"conv": convs, "state": states}
+
+    elif cfg.is_encdec:
+        enc_out = cache["enc_out"]
+        def step(h, inp):
+            p, ck, cv = inp
+            hn = apply_norm(p["norm1"], h, cfg)
+            y, ck, cv = attn_mod.decode_attention(p["attn"], hn, ck, cv,
+                                                  pos, cfg)
+            h = h + y
+            hx = apply_norm(p["norm_x"], h, cfg)
+            h = h + attn_mod.cross_attention(p["xattn"], hx, enc_out, cfg)
+            h = h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
+            return h, (ck, cv)
+        x, (cks, cvs) = jax.lax.scan(
+            step, x, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"]))
+        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
+
+    else:
+        def step(h, inp):
+            p, ck, cv = inp
+            hn = apply_norm(p["norm1"], h, cfg)
+            y, ck, cv = attn_mod.decode_attention(p["attn"], hn, ck, cv,
+                                                  pos, cfg)
+            h = h + y
+            hn2 = apply_norm(p["norm2"], h, cfg)
+            if cfg.n_experts:
+                y2, _ = moe_mod.apply_moe_block(p["moe"], hn2, cfg)
+            else:
+                y2 = apply_mlp(p["mlp"], hn2, cfg)
+            return h + y2, (ck, cv)
+        x, (cks, cvs) = jax.lax.scan(
+            step, x, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"]))
+        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
+
+    new_cache["pos"] = pos + 1
+    x = apply_norm(params["final_norm"], x, cfg)
+    return logits_from_hidden(params["embed"], x, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig,
+            frames: Optional[jnp.ndarray] = None):
+    """Prefill returns last-position logits. (The dry-run lowers the full
+    forward; serving fills the cache by running decode positions — a
+    chunked cache-filling prefill is a TODO noted in DESIGN.md.)"""
+    from .transformer import forward
+    enc_out = encode(params, frames, cfg) if cfg.is_encdec else None
+    return forward(params, tokens, cfg, enc_out=enc_out, last_only=True)

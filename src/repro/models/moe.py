@@ -1,0 +1,176 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Design goals (in order):
+  1. Static shapes (pjit/dry-run friendly).
+  2. FLOPs proportional to top_k/n_experts (roofline-faithful) — the
+     dispatch is scatter/gather, NOT a (T, E, C) einsum, so the compiled
+     compute term reflects the real expert math.
+  3. Expert-parallel shardable: the (E, C, D) buffers carry the expert dim
+     explicitly; the sharding rules put E (or the FFN dim) on the model
+     axis and XLA inserts the all-to-all-style collectives.
+
+Tokens beyond an expert's capacity C = ceil(T * top_k / E * cap_factor)
+are dropped (standard Switch behaviour); the combine step re-normalizes
+gates over surviving assignments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_mlp, dtype_of, init_mlp
+from repro.runtime.act_sharding import constrain, constrain_any
+
+
+def init_moe(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    kr, ke = jax.random.split(key)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = d ** -0.5
+    p = {"router": (jax.random.normal(kr, (d, E)) * s).astype(jnp.float32)}
+    keys = jax.random.split(ke, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(keys[0], (E, d, f)) * s).astype(dt)
+        p["w_up"] = (jax.random.normal(keys[1], (E, d, f)) * s).astype(dt)
+    else:
+        p["w_up"] = (jax.random.normal(keys[1], (E, d, f)) * s).astype(dt)
+    p["w_down"] = (jax.random.normal(keys[2], (E, f, d))
+                   * f ** -0.5).astype(dt)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+def _expert_ffn(p, xin, cfg: ModelConfig):
+    """xin (E, C, D) -> (E, C, D), per-expert MLP via batched einsum."""
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        g = act(constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"]),
+                          "tp", None, None))
+        h = g * constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]),
+                          "tp", None, None)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]),
+                        approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _group_dispatch(xt, gate_idx, gate_vals, E: int, C: int):
+    """Per-group dispatch (Tg tokens). Returns (xin (E,C,D), slot, w).
+
+    vmapped over groups: the scatter then carries an explicit batch dim
+    aligned with the token sharding, so GSPMD partitions it instead of
+    replicating (the flat global scatter forced involuntary full
+    rematerialization — see EXPERIMENTS.md §Perf iteration 2)."""
+    Tg, D = xt.shape
+    K = gate_idx.shape[-1]
+    flat_e = gate_idx.reshape(-1)                          # (Tg*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)       # exclusive rank
+    rank = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]
+    keep = rank < C
+    # dropped assignments get an out-of-bounds slot: scatter mode="drop"
+    # discards them, gather mode="fill" returns zeros.
+    slot = jnp.where(keep, flat_e * C + rank, E * C)
+    buf = jnp.zeros((E * C, D), dtype=xt.dtype)
+    updates = jnp.broadcast_to(xt[:, None, :], (Tg, K, D)).reshape(Tg * K, D)
+    buf = buf.at[slot].set(updates, mode="drop", unique_indices=True)
+    w = gate_vals * keep.reshape(Tg, K)
+    return buf.reshape(E, C, D), slot, w
+
+
+def _group_combine(out_ec, slot, w, Tg: int):
+    """Inverse gather for one group. out_ec (E, C, D) -> (Tg, D)."""
+    E, C, D = out_ec.shape
+    flat = out_ec.reshape(E * C, D)
+    gathered = jnp.take(flat, slot, axis=0, mode="fill",
+                        fill_value=0).reshape(Tg, -1, D)
+    return jnp.einsum("tkd,tk->td", gathered, w.astype(out_ec.dtype))
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x (B, S, D) -> (B, S, D), plus aux losses dict.
+
+    Grouped dispatch: tokens are split into G = B groups (sequences) with
+    per-group capacity; dispatch/combine are vmapped so every scatter/
+    gather is local to a data shard. Expert compute runs as one batched
+    einsum over (G, E, C, D) with the FFN dim tensor-parallel.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    # Decode (S small): one flat group — per-sequence groups of 1 token
+    # would pad every expert's capacity to the minimum and waste E*C_min
+    # slots per token (512x for arctic).
+    if S >= 64:
+        G, Tg = B, S
+    else:
+        G, Tg = 1, B * S
+    C = capacity(cfg, Tg)
+    xg = x.reshape(G, Tg, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])        # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    xin, slot, w = jax.vmap(
+        lambda a, b, c: _group_dispatch(a, b, c, E, C))(xg, gate_idx,
+                                                        gate_vals)
+    # E-sharded (expert parallel) when E divides the model axis (arctic,
+    # jamba), else tokens-only (mixtral keeps E whole, F tensor-parallel).
+    xin = constrain_any(xin, ("dp", "tp", None, None),
+                        ("dp", None, None, None))          # (G, E, C, D)
+
+    out = _expert_ffn_grouped(p, xin, cfg)                 # (G, E, C, D)
+    out = constrain_any(out, ("dp", "tp", None, None),
+                        ("dp", None, None, None))
+
+    yg = jax.vmap(lambda a, b, c: _group_combine(a, b, c, Tg))(out, slot, w)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    keep_frac = jnp.mean((slot < E * C).astype(jnp.float32))
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep_frac}
+    return yg.reshape(B, S, D), aux
+
+
+def _expert_ffn_grouped(p, xin, cfg: ModelConfig):
+    """xin (G, E, C, D) -> (G, E, C, D); experts sharded over `model`
+    when E divides it, otherwise the FFN dim is tensor-parallel."""
+    cst = lambda t: constrain_any(t, ("dp", "tp", None, None),
+                                  ("dp", None, None, "tp"))
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        g = act(cst(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])))
+        h = g * cst(jnp.einsum("gecd,edf->gecf", xin, p["w_up"]))
+    else:
+        h = jax.nn.gelu(cst(jnp.einsum("gecd,edf->gecf", xin, p["w_up"])),
+                        approximate=True)
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+
+def apply_moe_block(p, x, cfg: ModelConfig, dense_fn=None):
+    """MoE (+ optional arctic dense residual MLP in parallel)."""
+    y, aux = apply_moe(p, x, cfg)
+    if cfg.dense_residual:
+        y = y + apply_mlp(p["dense_mlp"], x, cfg, dense_fn)
+    return y, aux
+
+
+def init_moe_block(cfg: ModelConfig, key):
+    p = init_moe(cfg, key)
+    if cfg.dense_residual:
+        p["dense_mlp"] = init_mlp(cfg, jax.random.fold_in(key, 7),
+                                  cfg.d_model, cfg.d_ff)
+    return p

@@ -1,0 +1,166 @@
+"""Mamba2 — State Space Duality (SSD) block, chunked matmul form.
+
+Follows arXiv:2405.21060: inputs are projected to per-head x, scalar decay
+A per head, input/output projections B/C shared across heads (n_groups=1),
+with a depthwise causal conv on (x, B, C) channels and a gated RMSNorm
+before the output projection.
+
+The chunked algorithm runs `lax.scan` over chunks of length Q carrying the
+inter-chunk state (B, H, P, N): per chunk the intra-chunk quadratic term is
+(B, H, Q, Q) — bounded memory, matmul-heavy (MXU-friendly), O(L) overall.
+
+Decode is the O(1) recurrent update: s = s * exp(dt*A) + dt * (B outer x).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dtype_of
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_ssm(cfg: ModelConfig, key):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_in, nh, N, P = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    k = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k[0], (d, 2 * d_in + 2 * N + nh))
+                    * s).astype(dt),
+        "conv_w": (jax.random.normal(k[1], (cfg.ssm_conv_width, conv_ch))
+                   * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(k[3], (d_in, d))
+                     * d_in ** -0.5).astype(dt),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_in, nh, N, _ = ssm_dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along time. xbc (B, L, C); w (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def apply_ssm(p, x, cfg: ModelConfig):
+    """Training / prefill forward. x (B, L, D) -> (B, L, D)."""
+    Bsz, L, _ = x.shape
+    d_in, nh, N, P = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    nc = L // Q
+
+    z, xbc, dt_raw = _split_proj(x @ p["in_proj"], cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(Bsz, L, nh, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,nh)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    dA = dt * A                                                       # (B,L,nh)
+
+    # chunk views: (nc, B, Q, ...)
+    def chunkify(t):
+        return jnp.moveaxis(t.reshape(Bsz, nc, Q, *t.shape[2:]), 0, 1)
+    xs_c, B_c, C_c = chunkify(xs), chunkify(Bmat), chunkify(Cmat)
+    dt_c, dA_c = chunkify(dt), chunkify(dA)
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq, daq = inp          # (B,Q,...)
+        cum = jnp.cumsum(daq, axis=1)       # (B,Q,nh)
+        # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (c_i.b_j) x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,nh)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", cq.astype(jnp.float32),
+                        bq.astype(jnp.float32))                # (B,Q,Q)
+        w = cb[:, :, :, None] * decay * dtq[:, None, :, :]     # (B,Q,Q,nh)
+        y = jnp.einsum("bqkh,bkhp->bqhp", w, xs_f(xq))
+        # inter-chunk: contribution of the carried state
+        dec0 = jnp.exp(cum)                                    # (B,Q,nh)
+        y += jnp.einsum("bqn,bqh,bhpn->bqhp", cq.astype(jnp.float32),
+                        dec0, state)
+        # state update
+        decT = jnp.exp(cum[:, -1:, :] - cum)                   # (B,Q,nh)
+        contrib = jnp.einsum("bqh,bqn,bqhp->bhpn",
+                             decT * dtq, bq.astype(jnp.float32), xs_f(xq))
+        new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
+        return new_state, y
+
+    def xs_f(t):
+        return t.astype(jnp.float32)
+
+    state0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
+    # remat the chunk body: its (B, Q, Q, nh) f32 intra-chunk tensors
+    # otherwise persist as backward residuals for EVERY chunk (~70 GB/dev
+    # for jamba train_4k).
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0,
+                         (xs_c, B_c, C_c, dt_c, dA_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, nh, P)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, d_in).astype(x.dtype)
+    return _gated_norm(y, z, p["norm_scale"]) @ p["out_proj"]
+
+
+# ------------------------------------------------------------ decode -------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    d_in, nh, N, P = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          dtype_of(cfg)),
+        "state": jnp.zeros((n_layers, batch, nh, P, N), jnp.float32),
+    }
+
+
+def decode_ssm(p, x, conv_state, ssm_state, cfg: ModelConfig):
+    """One-token decode. x (B, 1, D); conv_state (B, W-1, C);
+    ssm_state (B, nh, P, N). Returns (y, new_conv, new_state)."""
+    Bsz = x.shape[0]
+    d_in, nh, N, P = ssm_dims(cfg)
+    z, xbc, dt_raw = _split_proj(x[:, 0] @ p["in_proj"], cfg)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)
+    conv = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv)
+    xs, Bv, Cv = jnp.split(xbc_t, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(Bsz, nh, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                              # (B,nh)
+    contrib = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv.astype(jnp.float32), xs)
+    new_state = ssm_state * da[:, :, None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), new_state)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
+    out = _gated_norm(y, z[:, None, :], p["norm_scale"]) @ p["out_proj"]
+    return out, window[:, 1:], new_state

@@ -1,0 +1,255 @@
+"""Unified model builder: decoder LMs (dense/MoE/VLM), SSM (Mamba2),
+hybrid (Jamba), encoder-decoder (Whisper).
+
+Layer stacks are parameter-stacked (leading layer axis) and executed with
+`lax.scan` so the HLO stays O(1) in depth — essential for compiling 480B
+configs on a 1-core container. `jax.vmap(init_block)` over split keys
+creates the stacked params; under `jax.eval_shape` this allocates nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, cross_entropy, dtype_of,
+                     embed_tokens, init_embeddings, init_mlp, init_norm,
+                     logits_from_hidden)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg, cfg.d_model),
+         "norm2": init_norm(cfg, cfg.d_model),
+         "attn": attn_mod.init_attention(cfg, k1)}
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe_block(cfg, k2)
+    else:
+        p["mlp"] = init_mlp(cfg, k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_ssm_block(cfg: ModelConfig, key):
+    return {"norm1": init_norm(cfg, cfg.d_model),
+            "ssm": ssm_mod.init_ssm(cfg, key)}
+
+
+def _init_hybrid_period(cfg: ModelConfig, key):
+    """One Jamba period: `attn_period` sublayers, attention at attn_index,
+    Mamba elsewhere; MoE on every `moe_every`-th sublayer, dense MLP on the
+    rest. Each sublayer keeps its own FFN."""
+    P = cfg.attn_period
+    keys = jax.random.split(key, 2 * P)
+    subs = []
+    for i in range(P):
+        mixer_key, ffn_key = keys[2 * i], keys[2 * i + 1]
+        sub = {"norm1": init_norm(cfg, cfg.d_model),
+               "norm2": init_norm(cfg, cfg.d_model)}
+        if i == cfg.attn_index:
+            sub["attn"] = attn_mod.init_attention(cfg, mixer_key)
+        else:
+            sub["ssm"] = ssm_mod.init_ssm(cfg, mixer_key)
+        if cfg.n_experts and (i % cfg.moe_every == cfg.moe_every - 1):
+            sub["moe"] = moe_mod.init_moe_block(cfg, ffn_key)
+        else:
+            sub["mlp"] = init_mlp(cfg, ffn_key, cfg.d_model, cfg.d_ff)
+        subs.append(sub)
+    return {f"sub{i}": s for i, s in enumerate(subs)}
+
+
+def _init_encdec_block(cfg: ModelConfig, key, cross: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": init_norm(cfg, cfg.d_model),
+         "norm2": init_norm(cfg, cfg.d_model),
+         "attn": attn_mod.init_attention(cfg, k1),
+         "mlp": init_mlp(cfg, k2, cfg.d_model, cfg.d_ff)}
+    if cross:
+        p["norm_x"] = init_norm(cfg, cfg.d_model)
+        p["xattn"] = attn_mod.init_attention(cfg, k3)
+    return p
+
+
+def _stacked(init_fn, n: int, key):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    ke, kb, kenc = jax.random.split(key, 3)
+    params = {"embed": init_embeddings(cfg, ke),
+              "final_norm": init_norm(cfg, cfg.d_model)}
+    if cfg.family == "ssm":
+        params["blocks"] = _stacked(lambda k: _init_ssm_block(cfg, k),
+                                    cfg.n_layers, kb)
+    elif cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        params["periods"] = _stacked(lambda k: _init_hybrid_period(cfg, k),
+                                     n_periods, kb)
+    elif cfg.is_encdec:
+        params["blocks"] = _stacked(
+            lambda k: _init_encdec_block(cfg, k, cross=True),
+            cfg.n_layers, kb)
+        params["enc_blocks"] = _stacked(
+            lambda k: _init_encdec_block(cfg, k, cross=False),
+            cfg.encoder_layers, kenc)
+        params["enc_final_norm"] = init_norm(cfg, cfg.d_model)
+    else:
+        params["blocks"] = _stacked(lambda k: _init_dense_block(cfg, k),
+                                    cfg.n_layers, kb)
+    if cfg.frontend == "vision_stub":
+        # projection of precomputed patch embeddings into the LM stream
+        params["patch_proj"] = (jax.random.normal(
+            jax.random.fold_in(key, 9), (cfg.d_model, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dtype_of(cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(S: int, d: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def _dense_block_fwd(p, x, cfg: ModelConfig, positions):
+    h = x + attn_mod.attention(p["attn"], apply_norm(p["norm1"], x, cfg),
+                               cfg, positions)
+    hn = apply_norm(p["norm2"], h, cfg)
+    if cfg.n_experts:
+        y, _aux = moe_mod.apply_moe_block(p["moe"], hn, cfg)
+    else:
+        y = apply_mlp(p["mlp"], hn, cfg)
+    return h + y
+
+
+def _ssm_block_fwd(p, x, cfg: ModelConfig):
+    return x + ssm_mod.apply_ssm(p["ssm"], apply_norm(p["norm1"], x, cfg), cfg)
+
+
+def _hybrid_period_fwd(p, x, cfg: ModelConfig, positions):
+    # Each sublayer is itself rematerialized: the 8-sublayer period body
+    # otherwise keeps every sublayer's intermediates live as residuals
+    # (jamba train temp was 80 GB/dev with period-level remat only).
+    def sublayer(i, sub, h):
+        hn = apply_norm(sub["norm1"], h, cfg)
+        if i == cfg.attn_index:
+            h = h + attn_mod.attention(sub["attn"], hn, cfg, positions)
+        else:
+            h = h + ssm_mod.apply_ssm(sub["ssm"], hn, cfg)
+        hn2 = apply_norm(sub["norm2"], h, cfg)
+        if "moe" in sub:
+            y, _aux = moe_mod.apply_moe_block(sub["moe"], hn2, cfg)
+        else:
+            y = apply_mlp(sub["mlp"], hn2, cfg)
+        return h + y
+
+    for i in range(cfg.attn_period):
+        fn = jax.checkpoint(functools.partial(sublayer, i)) if cfg.remat \
+            else functools.partial(sublayer, i)
+        x = fn(p[f"sub{i}"], x)
+    return x
+
+
+def _scan_stack(blocks, x, body, remat: bool, policy: str = "full"):
+    if remat and policy == "dots":
+        fn = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        fn = jax.checkpoint(body)
+    else:
+        fn = body
+    def step(carry, layer_params):
+        return fn(layer_params, carry), None
+    out, _ = jax.lax.scan(step, x, blocks)
+    return out
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (B, Se, D)."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
+
+    def body(p, h):
+        hn = apply_norm(p["norm1"], h, cfg)
+        h = h + attn_mod.attention(p["attn"], hn, cfg,
+                                   jnp.zeros(h.shape[:2], jnp.int32),
+                                   causal=False)
+        return h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
+
+    x = _scan_stack(params["enc_blocks"], x, body, cfg.remat,
+                    cfg.remat_policy)
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            last_only: bool = False):
+    """Full-sequence forward to logits.
+
+    frontend_embeds: VLM patch embeddings (B, n_patches, D) prepended to
+    the token stream (pixtral) — logits are returned for token positions
+    only. enc_out: whisper encoder output for cross-attention.
+    last_only: unembed only the final position (prefill) — at 150k vocab,
+    unembedding all 32k positions would dominate prefill compute/memory.
+    """
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    n_front = 0
+    if cfg.frontend == "vision_stub" and frontend_embeds is not None:
+        fe = frontend_embeds @ params["patch_proj"]
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        n_front = frontend_embeds.shape[1]
+    if cfg.rope_pct == 0:
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 (B, x.shape[1]))
+
+    if cfg.family == "ssm":
+        body = lambda p, h: _ssm_block_fwd(p, h, cfg)
+        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
+    elif cfg.family == "hybrid":
+        body = lambda p, h: _hybrid_period_fwd(p, h, cfg, positions)
+        x = _scan_stack(params["periods"], x, body, cfg.remat, cfg.remat_policy)
+    elif cfg.is_encdec:
+        def body(p, h):
+            hn = apply_norm(p["norm1"], h, cfg)
+            h = h + attn_mod.attention(p["attn"], hn, cfg, positions)
+            hx = apply_norm(p["norm_x"], h, cfg)
+            h = h + attn_mod.cross_attention(p["xattn"], hx, enc_out, cfg)
+            return h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
+        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
+    else:
+        body = lambda p, h: _dense_block_fwd(p, h, cfg, positions)
+        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    if n_front:
+        x = x[:, n_front:]
+    if last_only:
+        x = x[:, -1:]
+    return logits_from_hidden(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg,
+                     frontend_embeds=batch.get("frontend"),
+                     enc_out=(encode(params, batch["frames"], cfg)
+                              if cfg.is_encdec else None))
+    return cross_entropy(logits, batch["labels"])

@@ -1,0 +1,107 @@
+"""AdamW (the paper's optimizer) as pure pytree functions, with optional
+INT8-quantized first/second moments (block-wise, using this repo's own
+quantization machinery) — a distributed-optimization memory trick that cuts
+optimizer-state HBM by 4x (discussed in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def _zeros_like_state(p, int8: bool, sqrt_domain: bool):
+    """Block-quantized INT8 moment storage (bitsandbytes-style).
+
+    First moment: signed linear INT8 per 256-block. Second moment (always
+    >= 0, huge dynamic range): quantized in the SQRT domain — linear INT8
+    on v collapses small entries to zero and 1/sqrt(v+eps) then explodes.
+    The `sqrt` marker key selects the codec.
+    """
+    if int8 and p.ndim >= 1 and p.size >= 256:
+        blk = 256
+        nblk = -(-p.size // blk)
+        d = {"q": jnp.zeros((nblk, blk), jnp.int8),
+             "scale": jnp.zeros((nblk, 1), jnp.float32)}
+        if sqrt_domain:
+            d["sqrt"] = jnp.ones((), jnp.int8)
+        return d
+    return jnp.zeros_like(p, dtype=jnp.float32)
+
+
+def _size(shape):
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _dequant(s, shape):
+    if isinstance(s, dict):
+        val = s["q"].astype(jnp.float32) * s["scale"]
+        if "sqrt" in s:
+            val = val * val
+        return val.reshape(-1)[:_size(shape)].reshape(shape)
+    return s
+
+
+def _quant(x, like):
+    if isinstance(like, dict):
+        blk = like["q"].shape[1]
+        nblk = like["q"].shape[0]
+        pad = nblk * blk - x.size
+        flat = jnp.pad(x.reshape(-1), (0, pad)).reshape(nblk, blk)
+        if "sqrt" in like:
+            flat = jnp.sqrt(jnp.maximum(flat, 0.0))
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0 + 1e-12
+        out = {"q": jnp.round(flat / scale).astype(jnp.int8),
+               "scale": scale.astype(jnp.float32)}
+        if "sqrt" in like:
+            out["sqrt"] = like["sqrt"]
+        return out
+    return x
+
+
+def adamw_init(params, int8_state: bool = False) -> AdamWState:
+    mk_m = lambda p: _zeros_like_state(p, int8_state, sqrt_domain=False)
+    mk_v = lambda p: _zeros_like_state(p, int8_state, sqrt_domain=True)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(mk_m, params),
+                      v=jax.tree_util.tree_map(mk_v, params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32)
+        m = b1 * _dequant(m_s, p.shape) + (1 - b1) * g
+        v = b2 * _dequant(v_s, p.shape) + (1 - b2) * g * g
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, _quant(m, m_s), _quant(v, v_s)
+
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,18 @@
+"""LR schedules. The paper's training protocol (Sec. VI-A): cosine
+annealing 1e-3 -> 1e-7 with warmup (1e-5 start) and cooldown."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, base_lr: float = 1e-3,
+                       min_lr: float = 1e-7, warmup_start: float = 1e-5,
+                       warmup_steps: int = 100, total_steps: int = 10000):
+    step = jnp.asarray(step, jnp.float32)
+    warm = warmup_start + (base_lr - warmup_start) * (
+        step / jnp.maximum(warmup_steps, 1))
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,117 @@
+"""While-trip-aware collective-byte accounting from optimized HLO text.
+
+The dry-run's collective term needs bytes moved per step, but collectives
+inside `while` (scan) bodies execute trip-count times. This parser:
+
+  1. splits the HLO module into computations,
+  2. records each computation's local collective result-bytes by kind,
+  3. builds the call graph (while/call/fusion/conditional edges) with
+     while-trip counts recovered from the loop condition's comparison
+     constant,
+  4. propagates multipliers from ENTRY.
+
+Result bytes are per-DEVICE (the HLO is the partitioned SPMD program).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+               "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_COLLECTIVE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?(\w+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_WHILE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                    r"body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^}]*"n":"(\d+)"')
+_CALLS_FUSION = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Computations start at column 0 with `%name (`/`ENTRY %name (` and
+    contain indented op lines. (A regex over the whole module text breaks
+    on tuple-typed while params — nested parens.)"""
+    comps: Dict[str, str] = {}
+    name = None
+    buf: list = []
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HEADER.match(line)
+            if m:
+                if name is not None:
+                    comps[name] = "\n".join(buf)
+                name = "__entry__" if m.group(1) else m.group(2)
+                buf = [line]
+                continue
+        if name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def _local_bytes(body: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE.finditer(body):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * DTYPE_BYTES[dt]
+    return out
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST_INT.findall(cond_body)]
+    consts = [c for c in consts if 1 < c <= 1_000_000]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    comps = _split_computations(hlo)
+    local = {name: _local_bytes(body) for name, body in comps.items()}
+
+    # edges: (callee, multiplier)
+    edges: Dict[str, list] = {name: [] for name in comps}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            m = _WHILE.search(line)
+            if m:
+                cond, wbody = m.group(1), m.group(2)
+                tm = _TRIP.search(line)
+                trips = int(tm.group(1)) if tm else \
+                    _trip_count(comps.get(cond, ""))
+                edges[name].append((wbody, trips))
+                edges[name].append((cond, trips))
+                continue
+            for cm in _CALLS_FUSION.finditer(line):
+                callee = cm.group(1)
+                if callee in comps:
+                    edges[name].append((callee, 1))
+
+    total: Dict[str, float] = {}
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name in seen_stack or mult <= 0 or name not in comps:
+            return
+        seen_stack.add(name)
+        for kind, b in local.get(name, {}).items():
+            total[kind] = total.get(kind, 0.0) + b * mult
+        for callee, trips in edges.get(name, []):
+            visit(callee, mult * trips)
+        seen_stack.discard(name)
+
+    visit("__entry__", 1.0)
+    total["total"] = sum(v for k, v in total.items() if k != "total")
+    return total

@@ -1,0 +1,2 @@
+from .sparse_linear import (DBPIMCompressed, dequant_tree,  # noqa: F401
+                            pim_speedup_estimate, sparsify_params)

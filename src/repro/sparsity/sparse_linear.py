@@ -1,0 +1,187 @@
+"""DB-PIM sparsity as a first-class LM feature.
+
+The paper evaluates CNNs; this module applies the identical hybrid-grained
+pipeline (block-wise value pruning -> FTA bit-level quantization) to the
+projection matrices of any of the 10 assigned architectures:
+
+  * `sparsify_params` compresses every eligible projection (attention
+    q/k/v/o, MLP gate/up/down, MoE experts, SSM in/out) — stacked layer
+    tensors are handled per-layer; routers/norms/embeddings stay dense
+    (same reasoning as the paper's dw-conv exclusion);
+  * `dequant_tree` reconstructs FTA-compliant float weights (exact on the
+    INT8 x scale grid) so the SAME model code runs the compressed model;
+  * `pim_speedup_estimate` maps each projection to the DB-PIM cost model
+    -> a beyond-paper result: DB-PIM speedup/energy for transformer
+    inference (EXPERIMENTS.md §Beyond-paper).
+
+On TPU the compressed tensors feed the Pallas kernels
+(kernels.block_sparse_matmul for the value level, kernels.fta_int8_matmul
+for the bit level).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fta, pruning
+from repro.core.pim_model import (DEFAULT_PIM, LayerGEMM, evaluate_model,
+                                  evaluate_dense_baseline,
+                                  sparsity_from_export)
+from repro.models.config import ModelConfig
+
+ELIGIBLE = re.compile(
+    r"(attn|xattn)/(wq|wk|wv|wo)$|mlp/w_(gate|up|down)$|"
+    r"moe/w_(gate|up|down)$|moe/dense_mlp/w_(gate|up|down)$|"
+    r"ssm/(in_proj|out_proj)$")
+
+
+@dataclass
+class DBPIMCompressed:
+    """Compressed weight artifact tree + per-tensor sparsity metadata."""
+    tensors: Dict[str, dict] = field(default_factory=dict)
+    report: Dict[str, dict] = field(default_factory=dict)
+
+
+def _key(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _compress_2d(w2: np.ndarray, value_sparsity: float, alpha: int):
+    K, N = w2.shape
+    pad = (-N) % alpha
+    if pad:
+        w2 = np.pad(w2, ((0, 0), (0, pad)))
+    mask = np.asarray(pruning.block_prune_mask(w2.astype(np.float32),
+                                               value_sparsity, alpha))
+    amax = np.abs(w2).max() + 1e-12
+    scale = amax / 127.0
+    q = np.clip(np.round(w2 / scale), -127, 127).astype(np.int32)
+    q_fta, phi = fta.fta_quantize(q, mask)
+    return q_fta, float(scale), mask, np.asarray(phi), pad
+
+
+def sparsify_params(params, cfg: ModelConfig,
+                    value_sparsity: Optional[float] = None,
+                    alpha: int = 8) -> DBPIMCompressed:
+    vs = cfg.dbpim_value_sparsity if value_sparsity is None else value_sparsity
+    out = DBPIMCompressed()
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        key = _key(path)
+        if not ELIGIBLE.search(key) or leaf.ndim < 2:
+            continue
+        arr = np.asarray(leaf, dtype=np.float32)
+        lead = arr.shape[:-2]
+        arr2 = arr.reshape((-1,) + arr.shape[-2:])
+        qs, masks, phis = [], [], []
+        scale_list = []
+        pad = 0
+        for l in range(arr2.shape[0]):
+            q, scale, mask, phi, pad = _compress_2d(arr2[l], vs, alpha)
+            qs.append(q)
+            masks.append(mask)
+            phis.append(phi)
+            scale_list.append(scale)
+        q_all = np.stack(qs).reshape(lead + qs[0].shape)
+        mask_all = np.stack(masks).reshape(lead + masks[0].shape)
+        out.tensors[key] = {
+            "q": q_all.astype(np.int8), "scale": np.asarray(scale_list,
+                                                            np.float32),
+            "mask": mask_all.astype(np.int8), "pad": pad,
+            "orig_shape": arr.shape, "dtype": str(leaf.dtype),
+        }
+        sp = sparsity_from_export(qs[0] * masks[0], masks[0], phis[0])
+        out.report[key] = {
+            "value_sparsity": sp.value_sparsity,
+            "bit_sparsity": fta.achieved_bit_sparsity(qs[0], masks[0]),
+            "phi_hist": sp.phi_hist,
+            "int8_bytes": int(q_all.size),
+            "orig_bytes": int(arr.size * (2 if "bfloat16" in str(leaf.dtype)
+                                          else 4)),
+        }
+    return out
+
+
+def dequant_tree(params, comp: DBPIMCompressed):
+    """Replace eligible leaves with their FTA-compliant reconstruction."""
+    def visit(path, leaf):
+        key = _key(path)
+        t = comp.tensors.get(key)
+        if t is None:
+            return leaf
+        lead = t["orig_shape"][:-2]
+        q = t["q"].reshape((-1,) + t["q"].shape[-2:]).astype(np.float32)
+        w = q * t["scale"].reshape(-1, 1, 1)
+        if t["pad"]:
+            w = w[:, :, :-t["pad"]]
+        w = w.reshape(t["orig_shape"])
+        return jnp.asarray(w, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def pim_speedup_estimate(comp: DBPIMCompressed, cfg: ModelConfig,
+                         tokens: int = 64):
+    """Map the compressed projections onto the DB-PIM cost model:
+    speedup/energy/U_act of running this LM's matmuls on the paper's chip
+    vs its dense digital-PIM baseline."""
+    layers, sps = [], {}
+    for key, t in comp.tensors.items():
+        q2 = t["q"].reshape((-1,) + t["q"].shape[-2:])
+        mask2 = t["mask"].reshape((-1,) + t["mask"].shape[-2:])
+        K, N = q2.shape[-2:]
+        g = LayerGEMM(key, M=tokens, K=K, N=N, kind="fc")
+        layers.append(g)
+        phi = np.asarray(fta.compute_thresholds(
+            q2[0].astype(np.int32), mask2[0].astype(np.int32)))
+        sps[key] = sparsity_from_export(q2[0].astype(np.int32),
+                                        mask2[0].astype(np.int32), phi)
+    ours = evaluate_model(layers, sps, use_input_bit=False)
+    dense = evaluate_dense_baseline(layers)
+    return {
+        "speedup": dense.cycles / ours.cycles,
+        "energy_savings": 1 - ours.energy_pj / dense.energy_pj,
+        "u_act": ours.u_act,
+        "n_projections": len(layers),
+    }
+
+
+# ---------------------------------------------------------------------------
+# In-graph INT8 weight serving (decode is weight-traffic-bound: storing
+# projections INT8 + per-filter scale halves the dominant roofline term).
+# jax-traceable => works under eval_shape for the dry-run.
+# ---------------------------------------------------------------------------
+
+def quantize_params_for_serving(params):
+    """Eligible projection leaves -> {"q": int8, "scale": f32 per-filter}."""
+    def visit(path, leaf):
+        key = _key(path)
+        if not ELIGIBLE.search(key) or leaf.ndim < 2:
+            return leaf
+        amax = jnp.max(jnp.abs(leaf.astype(jnp.float32)), axis=-2,
+                       keepdims=True)
+        scale = amax / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(leaf.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequant_params_for_serving(qparams, dtype=jnp.bfloat16):
+    """Inverse of quantize_params_for_serving (dequant fuses into matmuls
+    on TPU — HBM traffic stays INT8)."""
+    def visit(node):
+        if isinstance(node, dict) and set(node) == {"q", "scale"}:
+            return (node["q"].astype(jnp.float32) * node["scale"]
+                    ).astype(dtype)
+        return node
+    return jax.tree_util.tree_map(
+        visit, qparams,
+        is_leaf=lambda x: isinstance(x, dict) and set(x) == {"q", "scale"})

@@ -1,0 +1,29 @@
+"""Chunked (flash-style) attention must match the dense reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.config import ModelConfig
+
+
+def _mk_cfg(window=0):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                       window=window)
+
+
+@pytest.mark.parametrize("window", [0, 64])
+def test_chunked_matches_dense(window):
+    cfg = _mk_cfg(window)
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 256, 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), jnp.float32)
+    dense = A._sdpa(q, k, v, A.causal_mask(S, S, window), jnp.float32)
+    chunked = A._chunked_sdpa(q, k, v, cfg, jnp.float32, chunk=64)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+Also property tests: the DBMU bit-serial datapath must equal the integer
+matmul EXACTLY for any FTA-compliant weights (hardware equivalence of the
+whole compression pipeline).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dyadic, fta, pruning
+from repro.kernels import ops, ref
+from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.fta_int8_matmul import fta_int8_matmul
+
+
+# ------------------------------------------------------ block-sparse -------
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 128), (256, 512, 256),
+                                   (128, 128, 384)])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_sparse_matmul(M, K, N, sparsity, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), dtype)
+    w = rng.normal(0, 1, (K, N)).astype(np.float32)
+    mask = np.asarray(pruning.block_prune_mask(w, sparsity, alpha=8))
+    # block-tile mask: zero whole (BK, BN) tiles for kernel-level sparsity
+    kt, nt = K // 128, N // 128
+    tile_alive = rng.random((kt, nt)) > sparsity
+    tile_mask = np.repeat(np.repeat(tile_alive, 128, 0), 128, 1)
+    w_blocks, idx = ops.pack_block_sparse(w * tile_mask,
+                                          np.ones_like(w, np.int32))
+    got = block_sparse_matmul(x, w_blocks.astype(dtype), idx)
+    want = ref.block_sparse_matmul_ref(x, jnp.asarray(w, dtype),
+                                       jnp.asarray(tile_mask))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_block_sparse_traffic_scales_with_sparsity():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 1, (512, 256)).astype(np.float32)
+    kt = 512 // 128
+    tile_alive = np.zeros((kt, 2), bool)
+    tile_alive[0, :] = True                      # 75% block sparsity
+    tile_mask = np.repeat(np.repeat(tile_alive, 128, 0), 128, 1)
+    w_blocks, idx = ops.pack_block_sparse(w * tile_mask,
+                                          np.ones_like(w, np.int32))
+    assert w_blocks.shape[1] == 1                # stores only alive blocks
+
+
+# ---------------------------------------------------------- int8 FTA -------
+
+@pytest.mark.parametrize("M,K,N", [(128, 512, 128), (256, 1024, 256)])
+def test_fta_int8_matmul(M, K, N):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.bfloat16)
+    w_q = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(0.005, 0.02, (1, N)), jnp.float32)
+    got = fta_int8_matmul(x, w_q, scales)
+    want = ref.fta_int8_matmul_ref(x, w_q, scales)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=0.5)
+
+
+def test_fta_matmul_exact_on_fta_grid():
+    """FTA weights are exactly representable: int8 path == float path."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(0, 0.05, (512, 128)), jnp.float32)
+    mask = jnp.ones((512, 128), jnp.int32)
+    q, scale, packed, phi = ops.fta_pack(w, mask)
+    x = jnp.asarray(rng.normal(0, 1, (128, 512)), jnp.float32)
+    got = ops.fta_dense(x, q, jnp.full((1, 128), scale))
+    w_fta = q.astype(jnp.float32) * scale
+    want = (x @ w_fta).astype(jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=0.3)
+
+
+# ------------------------------------------------------------- DBMU --------
+
+def test_dbmu_bit_true_equivalence():
+    """Bit-serial AND + CSD adder tree == integer matmul, exactly."""
+    rng = np.random.default_rng(4)
+    q = rng.integers(-127, 128, (64, 128), dtype=np.int32)
+    mask = np.ones_like(q)
+    q_fta, _ = fta.fta_quantize(q, mask)
+    packed = dyadic.pack_terms(q_fta)
+    x = rng.integers(-127, 128, (16, 64), dtype=np.int32)
+    got = np.asarray(ops.dbmu_reference_check(x, packed))
+    want = ref.dbmu_matmul_ref(x, packed)
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_dbmu_bit_true_random_seeds(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, (8, 128), dtype=np.int32)
+    q_fta, _ = fta.fta_quantize(q, np.ones_like(q))
+    packed = dyadic.pack_terms(q_fta)
+    x = rng.integers(-127, 128, (8, 8), dtype=np.int32)
+    got = np.asarray(ops.dbmu_reference_check(x, packed))
+    np.testing.assert_array_equal(got, ref.dbmu_matmul_ref(x, packed))

@@ -1,0 +1,94 @@
+"""Tests for the DB-PIM performance model: ordering/monotonicity invariants
+and the paper's headline reproduction bands."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import CNN_MODELS
+from repro.core import pim_model as pm
+from repro.core.workload_gen import model_metadata, layer_metadata
+
+ACCEL = ("std", "pw", "fc")
+
+
+def _speedup(name, vs, **kw):
+    layers = [l for l in CNN_MODELS[name]() if l.kind in ACCEL]
+    md = model_metadata(layers, vs, name, seed=0)
+    dense = pm.evaluate_dense_baseline(layers)
+    ours = pm.evaluate_model(layers, md, **kw)
+    return dense.cycles / ours.cycles, 1 - ours.energy_pj / dense.energy_pj
+
+
+def test_vgg19_fig11_band():
+    # Paper: 5.50x at 75%, 8.10x at 90%; savings 73.68% -> 83.90%.
+    sp75, es75 = _speedup("vgg19", 0.0, use_input_bit=False)
+    sp90, es90 = _speedup("vgg19", 0.6, use_input_bit=False)
+    assert 4.5 < sp75 < 6.5
+    assert 7.0 < sp90 < 9.5
+    assert 0.65 < es75 < 0.80
+    assert 0.80 < es90 < 0.93
+    assert sp90 > sp75 and es90 > es75
+
+
+def test_model_ordering_matches_paper():
+    # VGG19 > ResNet18 > MobileNetV2 in hardware gains (Sec. VI-C).
+    sps = {m: _speedup(m, 0.6, use_input_bit=False)[0]
+           for m in ("vgg19", "resnet18", "mobilenetv2")}
+    assert sps["vgg19"] > sps["resnet18"] > sps["mobilenetv2"]
+
+
+def test_hybrid_beats_single_sparsity():
+    # Fig. 12: hybrid > bit-only > value-only for every model.
+    for name in ("vgg19", "mobilenetv2"):
+        layers = CNN_MODELS[name]()
+        md = model_metadata(layers, 0.6, name, seed=0)
+        dense = pm.evaluate_dense_baseline(layers)
+        hyb = pm.evaluate_model(layers, md)
+        bit = pm.evaluate_model(layers, md, use_value=False)
+        val = pm.evaluate_model(layers, md, use_weight_bit=False,
+                                use_input_bit=False)
+        s = lambda r: dense.cycles / r.cycles
+        assert s(hyb) > s(bit) > s(val) > 1.0
+
+
+def test_speedup_monotone_in_sparsity():
+    sps = [_speedup("resnet18", v, use_input_bit=False)[0]
+           for v in (0.0, 0.2, 0.4, 0.6)]
+    assert all(b >= a - 0.15 for a, b in zip(sps, sps[1:]))  # ~monotone
+
+
+def test_u_act_beats_dense_baseline():
+    layers = [l for l in CNN_MODELS["vgg19"]() if l.kind in ACCEL]
+    md = model_metadata(layers, 0.6, "vgg19", seed=0)
+    ours = pm.evaluate_model(layers, md)
+    dense = pm.evaluate_dense_baseline(layers)
+    assert ours.u_act > 0.6            # paper: ~80%
+    assert ours.u_act > dense.u_act    # dense stores zero bits
+
+
+def test_sparsity_metadata_consistency():
+    rng = np.random.default_rng(0)
+    layer = pm.LayerGEMM("l", M=64, K=128, N=64)
+    sp = layer_metadata(layer, 0.5, 5.0, rng)
+    assert sp.value_sparsity == pytest.approx(0.5, abs=0.02)
+    assert sum(sp.phi_hist) == 64
+    assert sp.k_eff <= sp.k_eff_max8 <= layer.K
+    assert sp.macro_loads >= sp.col_loads / 16
+
+
+def test_dense_baseline_cycles_formula():
+    cfg = pm.DEFAULT_PIM
+    layer = pm.LayerGEMM("l", M=4, K=256, N=16)
+    rep = pm.dense_baseline_layer(layer, cfg)
+    # 1 M-tile x 1 N-tile x 16 row-cycles x 8 bits
+    assert rep.cycles == 16 * 8
+
+
+def test_simd_layers_identical_in_both_systems():
+    layers = CNN_MODELS["mobilenetv2"]()
+    md = model_metadata(layers, 0.6, "mobilenetv2", seed=0)
+    ours = pm.evaluate_model(layers, md)
+    dense = pm.evaluate_dense_baseline(layers)
+    dw_ours = [r.cycles for l, r in zip(layers, ours.layers) if l.kind == "dw"]
+    dw_dense = [r.cycles for l, r in zip(layers, dense.layers) if l.kind == "dw"]
+    assert dw_ours == dw_dense

@@ -1,0 +1,207 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, compression,
+fault tolerance, sharding rules."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, \
+    save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.optim import adamw_init, adamw_update, cosine_with_warmup
+from repro.runtime import sharding as shr
+from repro.runtime.compression import EFCompressor, compress_tree
+from repro.runtime.fault import ElasticMeshPlan, StragglerMonitor, \
+    run_resilient
+
+
+# ---------------------------------------------------------------- data -----
+
+def test_data_deterministic_and_host_sharded():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    ds = SyntheticLMDataset(cfg, 8, 32, seed=1)
+    b1, b2 = ds.batch_at(7), ds.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch_at(8)["tokens"], b1["tokens"])
+    # host sharding: different hosts see different slices, same shapes
+    d0 = SyntheticLMDataset(cfg, 8, 32, seed=1, host_id=0, n_hosts=2)
+    d1 = SyntheticLMDataset(cfg, 8, 32, seed=1, host_id=1, n_hosts=2)
+    assert d0.batch_at(0)["tokens"].shape == (4, 32)
+    assert not np.array_equal(d0.batch_at(0)["tokens"],
+                              d1.batch_at(0)["tokens"])
+
+
+def test_data_is_learnable_structure():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    ds = SyntheticLMDataset(cfg, 4, 256, seed=0)
+    toks = ds.batch_at(0)["tokens"]
+    # Zipf head: the most common token should be much more frequent than
+    # the uniform rate.
+    _, counts = np.unique(toks, return_counts=True)
+    assert counts.max() / toks.size > 3.0 / cfg.vocab_size
+
+
+# ------------------------------------------------------------ optimizer ----
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, st = adamw_update(params, grads, st, lr=0.05,
+                                  weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_int8_state_tracks_fp32():
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)
+    p_fp = {"w": w0}
+    p_q = {"w": w0}
+    st_fp = adamw_init(p_fp)
+    st_q = adamw_init(p_q, int8_state=True)
+    assert isinstance(st_q.m["w"], dict)           # block-quantized
+    for i in range(20):
+        g = {"w": jnp.sin(w0 * (i + 1))}
+        p_fp, st_fp = adamw_update(p_fp, g, st_fp, lr=1e-2)
+        p_q, st_q = adamw_update(p_q, g, st_q, lr=1e-2)
+    err = float(jnp.max(jnp.abs(p_fp["w"] - p_q["w"])))
+    assert err < 0.5            # bounded drift (bnb-style re-quant noise)
+    # and the int8-state optimizer still optimizes: quadratic convergence
+    p = {"w": jnp.linspace(-4.0, 4.0, 512)}
+    st = adamw_init(p, int8_state=True)
+    assert isinstance(st.m["w"], dict)
+    for _ in range(300):
+        p, st = adamw_update(p, {"w": 2 * p["w"]}, st, lr=0.05,
+                             weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.1
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_with_warmup(0)) == pytest.approx(1e-5)
+    assert float(cosine_with_warmup(100)) == pytest.approx(1e-3, rel=0.02)
+    assert float(cosine_with_warmup(10000)) == pytest.approx(1e-7, abs=1e-6)
+
+
+# ----------------------------------------------------------- checkpoint ----
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {"a": jnp.asarray([1.5, 2.5], jnp.bfloat16),
+            "b": {"c": jnp.arange(6, dtype=jnp.int32).reshape(2, 3)}}
+    save_checkpoint(str(tmp_path), 3, tree, extra={"x": 1})
+    restored, step, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 3 and extra == {"x": 1}
+    assert str(restored["a"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"w": jnp.zeros(4)}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1].endswith("5".zfill(10))
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2)
+    tree = {"w": jnp.ones(8)}
+    mgr.maybe_save(1, tree)          # skipped (every=2)
+    mgr.maybe_save(2, tree)
+    mgr.wait()
+    restored = mgr.restore_or_none(tree)
+    assert restored is not None and restored[1] == 2
+
+
+# ----------------------------------------------------------- compression ---
+
+def test_compress_tree_small_error():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (1024,)), jnp.float32)}
+    c = compress_tree(g)
+    err = float(jnp.max(jnp.abs(c["w"] - g["w"])))
+    assert err <= float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(0, 1, (1024,)), jnp.float32)
+    ef = EFCompressor.init({"w": g})
+    total_c = jnp.zeros_like(g)
+    for _ in range(50):
+        comp, ef = ef.compress({"w": g})
+        total_c += comp["w"]
+    # accumulated compressed sum converges to accumulated true sum
+    rel = float(jnp.linalg.norm(total_c - 50 * g)
+                / jnp.linalg.norm(50 * g))
+    assert rel < 0.01
+
+
+# --------------------------------------------------------------- fault -----
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor()
+    for _ in range(20):
+        assert not mon.record(0.1)
+    assert mon.record(1.0)
+
+
+def test_run_resilient_restarts_and_degrades():
+    calls = {"n": 0}
+    saved = {"step": 0}
+
+    def loop(start, plan):
+        calls["n"] += 1
+        for s in range(start, 50):
+            if calls["n"] <= 2 and s == 10 + calls["n"]:
+                raise RuntimeError("injected failure")
+            saved["step"] = s + 1
+        return 50
+
+    plan = ElasticMeshPlan(data_parallel=4, model_parallel=2)
+    final = run_resilient(loop, total_steps=50,
+                          restore_step=lambda: saved["step"],
+                          plan=plan)
+    assert final == 50 and calls["n"] == 3
+
+
+def test_elastic_plan_floor():
+    plan = ElasticMeshPlan(1, 16)
+    with pytest.raises(RuntimeError):
+        plan.degrade()
+
+
+# -------------------------------------------------------------- sharding ---
+
+def test_param_rules_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # use a fake 16x16 mesh via spec check only
+    import unittest.mock as mock
+    fake = mock.Mock()
+    fake.axis_names = ("data", "model")
+    fake.shape = {"data": 16, "model": 16}
+    # arctic heads: 56*128=7168 divisible; kv 8*128=1024 divisible
+    spec = shr.first_fit((4096, 7168), [(None, "model"), (None, None)], fake)
+    assert spec == P(None, "model")
+    # something not divisible falls back
+    spec = shr.first_fit((4096, 100), [(None, "model"), (None, None)], fake)
+    assert spec == P(None, None)
+
+
+def test_zero1_extends_largest_free_dim():
+    import unittest.mock as mock
+    fake = mock.Mock()
+    fake.axis_names = ("data", "model")
+    fake.shape = {"data": 16, "model": 16}
+    out = shr.zero1_spec(P(None, "model"), (4096, 12288), fake)
+    assert out == P("data", "model")
+    # already dp-sharded spec is left alone
+    out2 = shr.zero1_spec(P("data", "model"), (4096, 12288), fake)
+    assert out2 == P("data", "model")
