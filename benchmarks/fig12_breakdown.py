@@ -1,5 +1,7 @@
 """Fig. 12 — end-to-end speedup/energy breakdown by sparsity type
-(value-only / bit-only incl. input skip / hybrid) over the five models.
+(value-only / bit-only incl. input skip / joint a.k.a. the paper's
+"hybrid") over the five models, using the shared kernel-mode vocabulary
+(paper_cnns.MODE_FLAGS == ModelConfig.dbpim_mode values).
 
 Paper reference maxima: bit-level 5.46x / 77.66% savings; hybrid 8.01x /
 85.28% savings; compact models much lower (SIMD-core share, Fig. 13).
@@ -7,16 +9,10 @@ Paper reference maxima: bit-level 5.46x / 77.66% savings; hybrid 8.01x /
 
 from __future__ import annotations
 
-from repro.configs.paper_cnns import CNN_MODELS
+from repro.configs.paper_cnns import CNN_MODELS, MODE_FLAGS
 from repro.core import pim_model as pm
 from repro.core.workload_gen import model_metadata
 from .common import emit, timed
-
-MODES = {
-    "value": dict(use_weight_bit=False, use_input_bit=False),
-    "bit": dict(use_value=False),
-    "hybrid": dict(),
-}
 
 
 def run():
@@ -25,7 +21,9 @@ def run():
         layers = CNN_MODELS[name]()
         dense = pm.evaluate_dense_baseline(layers)
         md = model_metadata(layers, 0.6, name, seed=0)
-        for mode, kw in MODES.items():
+        for mode, kw in MODE_FLAGS.items():
+            if mode == "dense":          # the baseline itself
+                continue
             def point():
                 ours = pm.evaluate_model(layers, md, **kw)
                 return (dense.cycles / ours.cycles,

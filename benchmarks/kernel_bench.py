@@ -1,29 +1,68 @@
 """Kernel micro-benchmarks (interpret mode — correctness + derived
 traffic/compression stats; wall time on CPU is NOT a TPU metric, the
-derived column reports the structural savings the kernel realizes)."""
+derived column reports the structural savings the kernel realizes).
+
+``--smoke`` runs tiny shapes only — the CI guard that the kernels still
+compile and match their references without TPU hardware.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.configs.paper_cnns import joint_bench_shapes
 from repro.core import pruning
 from repro.kernels import ops, ref
 from .common import emit, timed
 
 
-def run():
+_tile_mask = ops.random_tile_mask        # shared with tests: one semantics
+
+
+def _joint_cases(rows, smoke: bool):
+    """dense / value-only / bit-only / joint weight traffic on the paper's
+    layer shapes (largest conv per CNN + AlexNet fc), plus a joint-vs-
+    dense-reference correctness probe."""
+    rng = np.random.default_rng(7)
+    shapes = ([("smoke", 128, 256, 256)] if smoke
+              else joint_bench_shapes(max_m=256))
+    sparsity = 0.5
+    for name, M, K, N in shapes:
+        w = rng.laplace(0, 0.02, (K, N)).astype(np.float32)
+        mask = _tile_mask(rng, K, N, sparsity)
+        survival = mask.mean()
+
+        dense_bytes = 2 * K * N                       # bf16 baseline
+        value_bytes = int(2 * K * N * survival)       # compacted bf16
+        bit_bytes = K * N                             # dense int8
+        packed = ops.pack_joint_sparse(w, mask)
+        joint_bytes = ops.joint_storage_bytes(packed)
+
+        x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+        (y,), us = timed(lambda: (ops.joint_dense(x, packed),))
+        want = ref.joint_packed_ref(x, packed)
+        err = float(jnp.max(jnp.abs(y - want))
+                    / jnp.maximum(jnp.max(jnp.abs(want)), 1e-6))
+        # the CI guard: a kernel-vs-reference mismatch must FAIL the run,
+        # not just print a big rel_err
+        assert err < 1e-4, f"joint kernel diverged on {name}: rel_err={err}"
+        rows.append((f"kernel.joint.{name}", us,
+                     f"bytes dense={dense_bytes} value={value_bytes} "
+                     f"bit={bit_bytes} joint={joint_bytes} "
+                     f"({joint_bytes/dense_bytes:.2f}x) rel_err={err:.1e}"))
+
+
+def run(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
 
     # block-sparse: HBM bytes scale with survival
-    M, K, N = 256, 1024, 256
+    M, K, N = (128, 256, 256) if smoke else (256, 1024, 256)
     x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
     w = rng.normal(0, 1, (K, N)).astype(np.float32)
-    for sp in (0.0, 0.5, 0.75):
-        kt = K // 128
-        alive = rng.random((kt, N // 128)) >= sp
-        mask = np.repeat(np.repeat(alive, 128, 0), 128, 1)
+    for sp in ((0.5,) if smoke else (0.0, 0.5, 0.75)):
+        mask = _tile_mask(rng, K, N, sp)
         w_blocks, idx = ops.pack_block_sparse(w * mask,
                                               np.ones_like(w, np.int32))
         (y,), us = timed(lambda: (ops.sparse_dense(x, w_blocks, idx),))
@@ -34,12 +73,16 @@ def run():
                      f"({stored/dense_bytes:.2f}x)"))
 
     # fta int8: 2x weight traffic vs bf16, 4x vs f32
-    wq = jnp.asarray(rng.integers(-127, 128, (1024, 256)), jnp.int8)
+    Kq = 512 if smoke else 1024
+    wq = jnp.asarray(rng.integers(-127, 128, (Kq, 256)), jnp.int8)
     scales = jnp.asarray(rng.uniform(0.005, 0.02, (1, 256)), jnp.float32)
-    xb = jnp.asarray(rng.normal(0, 1, (256, 1024)), jnp.bfloat16)
+    xb = jnp.asarray(rng.normal(0, 1, (M, Kq)), jnp.bfloat16)
     (y,), us = timed(lambda: (ops.fta_dense(xb, wq, scales),))
     rows.append(("kernel.fta_int8", us,
                  f"weight_bytes={wq.size} vs bf16={wq.size*2} (0.50x)"))
+
+    # joint value x bit: the paper's headline configuration
+    _joint_cases(rows, smoke)
 
     # dbmu bit-true sim
     from repro.core import fta as fta_mod, dyadic
@@ -49,9 +92,16 @@ def run():
     xi = rng.integers(-127, 128, (16, 128), dtype=np.int32)
     got, us = timed(lambda: np.asarray(ops.dbmu_reference_check(xi, packed)))
     exact = bool((got == ref.dbmu_matmul_ref(xi, packed)).all())
+    assert exact, "DBMU bit-true equivalence broken"
     rows.append(("kernel.dbmu_sim", us, f"bit_true_exact={exact}"))
     return emit(rows)
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, interpret mode — CI kernel guard")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -117,3 +117,40 @@ CNN_MODELS = {
     "mobilenetv2": mobilenet_v2,
     "efficientnetb0": efficientnet_b0,
 }
+
+
+#: DB-PIM kernel-mode -> cost-model feature flags (core.pim_model
+#: evaluate_model). The same mode vocabulary the LM configs use
+#: (ModelConfig.dbpim_mode), so paper CNNs select joint/value/bit too.
+MODE_FLAGS = {
+    "dense": dict(use_value=False, use_weight_bit=False, use_input_bit=False),
+    "value": dict(use_value=True, use_weight_bit=False, use_input_bit=False),
+    "bit": dict(use_value=False, use_weight_bit=True, use_input_bit=True),
+    "joint": dict(use_value=True, use_weight_bit=True, use_input_bit=True),
+}
+
+
+def _round_up(v: int, q: int) -> int:
+    return -(-v // q) * q
+
+
+def joint_bench_shapes(max_m: int = 256):
+    """Representative paper layer GEMMs for the kernel benchmark.
+
+    Picks the largest conv (std/pw — dw convs are excluded from DB-PIM
+    in the paper too) of each of the five CNNs plus AlexNet's fc1, rounds
+    dims up to the 128 kernel tile and caps M (batch-1 im2col rows) so
+    the interpret-mode benchmark stays fast.
+    """
+    shapes = []
+    for model in CNN_MODELS:
+        layers = CNN_MODELS[model]()
+        biggest = max((l for l in layers if l.kind not in ("dw", "fc")),
+                      key=lambda l: l.K * l.N)
+        shapes.append((f"{model}.{biggest.name}",
+                       min(_round_up(biggest.M, 128), max_m),
+                       _round_up(biggest.K, 128), _round_up(biggest.N, 128)))
+    fc = alexnet()[-2]
+    shapes.append(("alexnet.fc1", 128,
+                   _round_up(fc.K, 128), _round_up(fc.N, 128)))
+    return shapes

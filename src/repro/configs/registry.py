@@ -15,13 +15,30 @@ _MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_")
                             for a in ARCHS}
 
 
-def get_config(arch: str, reduced: bool = False):
+#: DB-PIM kernel modes selectable per config (mirrors
+#: sparsity.sparse_linear.KERNEL_MODES; kept literal so the registry
+#: stays import-light).
+DBPIM_MODES = ("dense", "value", "bit", "joint")
+
+
+def get_config(arch: str, reduced: bool = False,
+               dbpim_mode: str = None):
     """Load the ModelConfig for `arch`. reduced=True returns the small
-    smoke-test variant of the same family."""
+    smoke-test variant of the same family. dbpim_mode selects the DB-PIM
+    kernel path ("dense" | "value" | "bit" | "joint") the compression
+    pipeline packs for (sparsity.sparse_linear.build_kernel_tables ->
+    models.layers.make_matmul; threading the resulting dense_fn through
+    the scanned layer stacks is an open ROADMAP item)."""
     if arch not in _MODULES:
         raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
     mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
-    return mod.reduced_config() if reduced else mod.config()
+    cfg = mod.reduced_config() if reduced else mod.config()
+    if dbpim_mode is not None:
+        if dbpim_mode not in DBPIM_MODES:
+            raise KeyError(f"unknown dbpim_mode {dbpim_mode!r}; "
+                           f"choose from {DBPIM_MODES}")
+        cfg = cfg.scaled(dbpim=True, dbpim_mode=dbpim_mode)
+    return cfg
 
 
 def list_archs() -> List[str]:

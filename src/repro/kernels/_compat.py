@@ -1,0 +1,16 @@
+"""Version compat for the Pallas TPU API surface.
+
+jax renamed `pltpu.TPUCompilerParams` -> `pltpu.CompilerParams` across
+releases; resolve whichever this jax ships so the kernels import on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+# pl.CostEstimate is absent on very old jax; None disables the annotation.
+CostEstimate = getattr(pl, "CostEstimate", None)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams, CostEstimate
+
 BM, BK, BN = 128, 128, 128
 
 
@@ -51,6 +53,15 @@ def block_sparse_matmul(x, w_blocks, idx, *, interpret: bool = True):
     N = NT * BN
     grid = (M // BM, NT, MAXB)
 
+    # work scales with the STORED blocks only (the value-sparsity saving)
+    stored = NT * MAXB * BK * BN
+    cost_kw = {} if CostEstimate is None else {"cost_estimate": CostEstimate(
+        flops=2 * M * stored,
+        bytes_accessed=(M * K * x.dtype.itemsize
+                        + stored * w_blocks.dtype.itemsize
+                        + NT * MAXB * 4 + M * N * x.dtype.itemsize),
+        transcendentals=0)}
+
     return pl.pallas_call(
         functools.partial(_kernel, maxb=MAXB),
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -66,7 +77,8 @@ def block_sparse_matmul(x, w_blocks, idx, *, interpret: bool = True):
             scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
+        **cost_kw,
     )(idx, x, w_blocks)

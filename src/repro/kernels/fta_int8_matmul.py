@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams, CostEstimate
+
 BM, BK, BN = 128, 512, 128
 
 
@@ -48,6 +50,13 @@ def fta_int8_matmul(x, w_q, scales, *, out_dtype=jnp.bfloat16,
     nk = K // BK
     grid = (M // BM, N // BN, nk)
 
+    # weight traffic is the INT8 bytes (the bit-level saving vs bf16)
+    cost_kw = {} if CostEstimate is None else {"cost_estimate": CostEstimate(
+        flops=2 * M * K * N,
+        bytes_accessed=(M * K * x.dtype.itemsize + K * N + N * 4
+                        + M * N * jnp.dtype(out_dtype).itemsize),
+        transcendentals=0)}
+
     return pl.pallas_call(
         functools.partial(_kernel, nk=nk),
         grid=grid,
@@ -59,7 +68,8 @@ def fta_int8_matmul(x, w_q, scales, *, out_dtype=jnp.bfloat16,
         out_specs=pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
+        **cost_kw,
     )(x, w_q, scales)

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +12,7 @@ from repro.core import dyadic, fta, pruning, qat
 from .block_sparse_matmul import BK, BN, block_sparse_matmul
 from .dbmu_sim import dbmu_matmul
 from .fta_int8_matmul import fta_int8_matmul
+from .joint_sparse_matmul import BM as JBM, joint_sparse_matmul
 
 
 def pack_block_sparse(w_dense: np.ndarray, mask: np.ndarray,
@@ -63,6 +64,170 @@ def fta_dense(x, w_q, scales, interpret: bool = True):
     x2 = x.reshape(-1, shape[-1])
     y = fta_int8_matmul(x2, w_q, scales, interpret=interpret)
     return y.reshape(shape[:-1] + (y.shape[-1],))
+
+
+# ------------------------------------------------- joint value x bit -------
+
+def random_tile_mask(rng, K: int, N: int, sparsity: float,
+                     tile: int = 128) -> np.ndarray:
+    """Whole-(tile x tile) random survival mask (ceil + crop, so ragged
+    shapes work) — tile-granular value sparsity the kernels can actually
+    skip. At least one tile always survives. Benchmarks and tests share
+    this so their sparsity semantics cannot drift."""
+    kt, nt = -(-K // tile), -(-N // tile)
+    alive = rng.random((kt, nt)) >= sparsity
+    if not alive.any():
+        alive[0, 0] = True
+    full = np.repeat(np.repeat(alive, tile, 0), tile, 1)
+    return full[:K, :N].astype(np.int32)
+
+
+def tile_prune_mask(w: np.ndarray, value_sparsity: float,
+                    bk: int = BK, bn: int = BN) -> np.ndarray:
+    """TPU-granular value pruning: drop the lowest-L2 (bk, bn) weight
+    tiles at the target ratio (ceil + crop for ragged shapes).
+
+    This is the MXU mapping of the paper's 1 x alpha sparse allocation
+    network: the unit the joint/value kernels can actually SKIP is a
+    whole weight tile, so pruning for the kernel path must happen at
+    tile granularity — finer 1 x alpha pruning (core.pruning, used for
+    the accuracy experiments) essentially never empties a full tile and
+    would leave the packed layout dense. At least one tile survives.
+    """
+    K, N = w.shape
+    kt, nt = -(-K // bk), -(-N // bn)
+    wp = np.zeros((kt * bk, nt * bn), np.float32)
+    wp[:K, :N] = w
+    norms = (wp.reshape(kt, bk, nt, bn) ** 2).sum(axis=(1, 3))   # (kt, nt)
+    alive = np.ones((kt, nt), bool)
+    n_drop = min(int(round(value_sparsity * kt * nt)), kt * nt - 1)
+    if n_drop > 0:
+        order = np.argsort(norms, axis=None)                     # ascending
+        alive.flat[order[:n_drop]] = False
+    full = np.repeat(np.repeat(alive, bk, 0), bn, 1)[:K, :N]
+    return full.astype(np.int32)
+
+
+def quantize_int8_fta(w: np.ndarray, mask: np.ndarray,
+                      fta_project: bool = True):
+    """The bit-level compression step, shared by every packing path:
+    per-filter symmetric INT8 scale over the kept weights, then (unless
+    fta_project=False) the FTA projection, so the INT8 grid is exactly
+    servable by the PIM macro.
+
+    Returns (q int32 (K, N) masked + on the grid, scales f32 (1, N)).
+    """
+    m = np.asarray(mask, np.int32)
+    amax = np.abs(w * m).max(axis=0)
+    scales = (amax / 127.0 + 1e-12).astype(np.float32)
+    q = np.clip(np.round(w * m / scales), -127, 127).astype(np.int32)
+    if fta_project:
+        q, _phi = fta.fta_quantize(q, m)
+        q = np.asarray(q)
+    return q * m, scales.reshape(1, -1)
+
+class JointPacked(NamedTuple):
+    """Compacted + quantized weight artifact for joint_sparse_matmul.
+
+    ``w_blocks`` (NT, MAXB, bk, bn) int8 / ``idx`` (NT, MAXB) int32 /
+    ``scales`` (1, N_pad) f32 / ``nblocks`` (NT,) int32 real blocks per
+    tile (slots past it are zero payload). ``k``/``n`` are the original
+    logical dims, ``k_pad`` the padded K the index table refers to.
+    """
+    w_blocks: jnp.ndarray
+    idx: jnp.ndarray
+    scales: jnp.ndarray
+    nblocks: jnp.ndarray
+    k: int
+    n: int
+    k_pad: int
+
+
+def pack_joint_sparse(w_dense, mask=None, *, bk: int = BK, bn: int = BN,
+                      value_sparsity: float = None,
+                      fta_project: bool = True) -> JointPacked:
+    """Full joint compilation: prune -> INT8/FTA quantize -> compact.
+
+    A K-block survives for an N tile iff the (bk, bn) mask tile keeps any
+    weight. When no mask is given and value_sparsity is set, pruning
+    happens at (bk, bn) TILE granularity (tile_prune_mask) — the unit the
+    kernel can skip. Surviving payload is INT8 on the per-filter-scale
+    grid (FTA projection keeps it exactly representable); K and N are
+    zero-padded to the tile size, so odd shapes pack fine.
+    """
+    w = np.asarray(w_dense, np.float32)
+    K, N = w.shape
+    if mask is None:
+        m = (tile_prune_mask(w, value_sparsity, bk, bn) if value_sparsity
+             else np.ones_like(w, np.int32))
+    else:
+        m = np.asarray(mask, np.int32)
+    kp, npad = (-K) % bk, (-N) % bn
+    w = np.pad(w, ((0, kp), (0, npad)))
+    m = np.pad(m, ((0, kp), (0, npad)))
+    Kp, Np = w.shape
+
+    q, scales = quantize_int8_fta(w, m, fta_project=fta_project)
+    q = q.astype(np.int8)
+    scales = scales.reshape(-1)
+
+    kt, nt = Kp // bk, Np // bn
+    alive = m.reshape(kt, bk, nt, bn).sum(axis=(1, 3)) > 0      # (kt, nt)
+    maxb = max(int(alive.sum(axis=0).max()), 1)
+    tiles = q.reshape(kt, bk, nt, bn)
+    w_blocks = np.zeros((nt, maxb, bk, bn), np.int8)
+    idx = np.zeros((nt, maxb), np.int32)
+    nblocks = np.zeros((nt,), np.int32)
+    for n_t in range(nt):
+        rows = np.nonzero(alive[:, n_t])[0]
+        nblocks[n_t] = rows.size
+        for b, kblk in enumerate(rows):
+            w_blocks[n_t, b] = tiles[kblk, :, n_t, :]
+            idx[n_t, b] = kblk
+    return JointPacked(jnp.asarray(w_blocks), jnp.asarray(idx),
+                       jnp.asarray(scales.reshape(1, Np)),
+                       jnp.asarray(nblocks), K, N, Kp)
+
+
+def unpack_joint_sparse(packed: JointPacked) -> np.ndarray:
+    """Invert pack_joint_sparse -> dense fp32 (K, N) == q * mask * scale."""
+    wb = np.asarray(packed.w_blocks, np.int32)
+    idx = np.asarray(packed.idx)
+    nb = np.asarray(packed.nblocks)
+    nt, _, bk, bn = wb.shape
+    dense = np.zeros((packed.k_pad, nt * bn), np.float32)
+    for n_t in range(nt):
+        for b in range(int(nb[n_t])):
+            kblk = int(idx[n_t, b])
+            dense[kblk * bk:(kblk + 1) * bk,
+                  n_t * bn:(n_t + 1) * bn] = wb[n_t, b]
+    dense *= np.asarray(packed.scales)
+    return dense[:packed.k, :packed.n]
+
+
+def joint_storage_bytes(packed: JointPacked) -> int:
+    """HBM bytes of the joint artifact (payload + index + scales)."""
+    return int(packed.w_blocks.size + packed.idx.size * 4
+               + packed.scales.size * 4)
+
+
+def joint_dense(x, packed: JointPacked, interpret: bool = True):
+    """Public op: joint value x bit sparse y = x @ W for 2D/3D activations.
+
+    Pads M to the kernel row tile and K to the packed K (both zero — padded
+    K columns hit only pruned weight rows), slices the result back.
+    """
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    M, K = x2.shape
+    if K != packed.k:
+        raise ValueError(f"activation K={K} != packed k={packed.k}")
+    mp = (-M) % JBM
+    x2 = jnp.pad(x2, ((0, mp), (0, packed.k_pad - K)))
+    y = joint_sparse_matmul(x2, packed.w_blocks, packed.idx, packed.scales,
+                            interpret=interpret)
+    y = y[:M, :packed.n]
+    return y.reshape(shape[:-1] + (packed.n,))
 
 
 def dbmu_reference_check(x_int8, packed, interpret: bool = True):

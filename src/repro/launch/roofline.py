@@ -49,6 +49,8 @@ class RooflineCell:
     model_flops: float = 0.0
     hlo_flops: float = 0.0
     useful_ratio: float = 0.0
+    pim_frac: float = 0.0        # share of HBM bytes moved by DB-PIM
+                                 # Pallas kernels (joint/value/bit paths)
     bottleneck: str = ""
     roofline_fraction: float = 0.0
     temp_gb: float = 0.0
@@ -84,6 +86,8 @@ def analyze_record(rec: dict) -> RooflineCell:
     bytes_ = float(jc.get("bytes", 0.0)) + float(jc.get("arg_bytes", 0.0))
     coll = float(rec.get("collectives", {}).get("total", 0.0))
 
+    cell.pim_frac = (float(jc.get("pallas_bytes", 0.0)) / bytes_
+                     if bytes_ else 0.0)
     cell.compute_s = total_flops / (chips * PEAK_FLOPS)
     cell.memory_s = bytes_ / (chips * HBM_BW)
     cell.collective_s = coll / ICI_BW
@@ -118,7 +122,7 @@ def load_cells(dryrun_dir: str,
 def format_table(cells: List[RooflineCell], mesh: str = "single") -> str:
     hdr = (f"{'arch':<16}{'shape':<13}{'comp_ms':>9}{'mem_ms':>9}"
            f"{'coll_ms':>9}{'bound':>6}{'MF/HF':>7}{'roofline%':>10}"
-           f"{'temp_GB':>9}")
+           f"{'temp_GB':>9}{'pim%':>6}")
     lines = [hdr, "-" * len(hdr)]
     for c in cells:
         if c.mesh != mesh:
@@ -131,5 +135,6 @@ def format_table(cells: List[RooflineCell], mesh: str = "single") -> str:
             f"{c.arch:<16}{c.shape:<13}{c.compute_s*1e3:>9.2f}"
             f"{c.memory_s*1e3:>9.2f}{c.collective_s*1e3:>9.2f}"
             f"{c.bottleneck[:4]:>6}{c.useful_ratio:>7.2f}"
-            f"{c.roofline_fraction*100:>10.1f}{c.temp_gb:>9.1f}")
+            f"{c.roofline_fraction*100:>10.1f}{c.temp_gb:>9.1f}"
+            f"{c.pim_frac*100:>6.1f}")
     return "\n".join(lines)

@@ -61,6 +61,9 @@ class ModelConfig:
     # DB-PIM integration
     dbpim: bool = False                   # FTA-quantized projections
     dbpim_value_sparsity: float = 0.6
+    dbpim_mode: str = "joint"             # dense | value | bit | joint:
+                                          # which sparsity level(s) the
+                                          # serving kernels exploit
 
     # training
     remat: bool = True

@@ -86,6 +86,27 @@ def init_mlp(cfg: ModelConfig, key, d: int, f: int):
             "w_down": (jax.random.normal(k2, (f, d)) * s_out).astype(dt)}
 
 
+def make_matmul(cfg: ModelConfig, tables=None, interpret: bool = True):
+    """dense_fn factory for apply_mlp / attention.
+
+    When ``cfg.dbpim`` is set and packed kernel tables (from
+    ``sparsity.sparse_linear.build_kernel_tables``) are supplied, eligible
+    projections run on the DB-PIM Pallas kernel selected by
+    ``cfg.dbpim_mode`` — "joint" fuses value-level block skipping with
+    bit-level INT8 weights in one kernel. Returns None (plain matmuls)
+    otherwise, so call sites can pass the result straight through.
+
+    Scope note: apply_mlp / attention accept the returned dense_fn
+    per-layer; the scan-stacked transformer forwards do not thread it
+    yet (packed tables are per-layer pytrees of ragged MAXB, which
+    lax.scan cannot carry) — that serving integration is a ROADMAP item.
+    """
+    if not getattr(cfg, "dbpim", False) or not tables:
+        return None
+    from repro.sparsity.sparse_linear import kernel_dense_fn
+    return kernel_dense_fn(tables, interpret=interpret)
+
+
 def apply_mlp(p, x, cfg: ModelConfig, dense_fn=None):
     """dense_fn(w, x, name) lets the DB-PIM sparse path intercept matmuls."""
     mm = dense_fn or (lambda w, v, name: v @ w)

@@ -82,6 +82,38 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
             acc["bytes"] += (op_bytes
                              + _bytes(eqn.outvars[0].aval)) * mult
             continue
+        if prim == "pallas_call":
+            # Custom kernel (e.g. joint_sparse_matmul): its inner jaxpr
+            # sees per-BLOCK avals, so plain recursion would undercount
+            # by the grid size. Prefer the kernel's static CostEstimate
+            # for FLOPs; without one, recurse into the kernel body with
+            # the grid trip count as the multiplier (each grid step runs
+            # the body once on one block). HBM charges operands + result:
+            # packed INT8 payloads charge 1 B/weight and compacted tables
+            # only their stored bytes — exactly the joint-sparsity
+            # traffic saving the roofline should see.
+            ce = eqn.params.get("cost_estimate")
+            f = float(getattr(ce, "flops", 0) or 0)
+            if f:
+                acc["dot_flops"] += f * mult
+                acc["flops"] += f * mult
+                acc["pallas_flops"] += f * mult
+            else:
+                grid = getattr(eqn.params.get("grid_mapping"), "grid", ())
+                steps = 1
+                for g in grid:
+                    steps *= int(g)
+                inner = eqn.params["jaxpr"]
+                sub = {k: 0.0 for k in acc}
+                _walk(getattr(inner, "jaxpr", inner), mult * steps, sub)
+                acc["dot_flops"] += sub["dot_flops"]
+                acc["flops"] += sub["flops"]
+                acc["pallas_flops"] += sub["dot_flops"]
+            b = (sum(_bytes(v.aval) for v in eqn.invars)
+                 + sum(_bytes(v.aval) for v in eqn.outvars)) * mult
+            acc["bytes"] += b
+            acc["pallas_bytes"] += b
+            continue
         if prim == "scan":
             length = int(eqn.params.get("length", 1))
             inner = eqn.params["jaxpr"]
@@ -130,7 +162,8 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
 def analyze(fn, *args) -> Dict[str, float]:
     """Trip-aware cost of `fn(*args)` (args may be ShapeDtypeStructs)."""
     closed = jax.make_jaxpr(fn)(*args)
-    acc = {"flops": 0.0, "dot_flops": 0.0, "bytes": 0.0}
+    acc = {"flops": 0.0, "dot_flops": 0.0, "bytes": 0.0,
+           "pallas_flops": 0.0, "pallas_bytes": 0.0}
     _walk(closed.jaxpr, 1, acc)
     # argument + result residency: params/opt-state are read and written
     # once per step regardless of op-level traffic.

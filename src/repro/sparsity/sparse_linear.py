@@ -35,6 +35,12 @@ from repro.core.pim_model import (DEFAULT_PIM, LayerGEMM, evaluate_model,
                                   sparsity_from_export)
 from repro.models.config import ModelConfig
 
+#: Kernel dispatch modes for compressed projections. "value" skips pruned
+#: weight blocks (block_sparse_matmul), "bit" serves FTA/INT8 weights
+#: (fta_int8_matmul), "joint" fuses both in one kernel
+#: (joint_sparse_matmul) — the paper's headline configuration.
+KERNEL_MODES = ("dense", "value", "bit", "joint")
+
 ELIGIBLE = re.compile(
     r"(attn|xattn)/(wq|wk|wv|wo)$|mlp/w_(gate|up|down)$|"
     r"moe/w_(gate|up|down)$|moe/dense_mlp/w_(gate|up|down)$|"
@@ -151,6 +157,100 @@ def pim_speedup_estimate(comp: DBPIMCompressed, cfg: ModelConfig,
         "u_act": ours.u_act,
         "n_projections": len(layers),
     }
+
+
+# ---------------------------------------------------------------------------
+# Kernel-mode dispatch: pack projections once offline, then intercept the
+# model's matmuls (the dense_fn hook of apply_mlp / attention) with the
+# Pallas kernel selected by ModelConfig.dbpim_mode.
+# ---------------------------------------------------------------------------
+
+def pack_projection(w2, mode: str, value_sparsity: float = 0.6) -> dict:
+    """Compile one 2D projection (K, N) into the artifact for `mode`.
+
+    Value pruning here is TILE-granular (ops.tile_prune_mask) — the unit
+    the kernels can skip; the paper-faithful 1 x alpha pruning lives in
+    sparsify_params for the accuracy/cost-model artifacts. Falls back to
+    a reference artifact (same math, plain jnp) when the weight shape
+    does not divide the kernel tiling — "joint" pads internally and
+    never needs the fallback.
+    """
+    from repro.kernels import block_sparse_matmul as bsk
+    from repro.kernels import fta_int8_matmul as ftk
+    from repro.kernels import ops
+    if mode not in KERNEL_MODES:
+        raise ValueError(f"mode {mode!r} not in {KERNEL_MODES}")
+    w = np.asarray(w2, np.float32)
+    K, N = w.shape
+    if mode == "dense":
+        return {"kind": "dense"}
+    if mode == "joint":
+        packed = ops.pack_joint_sparse(w, value_sparsity=value_sparsity)
+        return {"kind": "joint", "packed": packed}
+
+    if mode == "value":
+        # tile-granular pruning: the unit block_sparse_matmul can skip
+        mask = ops.tile_prune_mask(w, value_sparsity, bsk.BK, bsk.BN)
+        art = {"kind": "value_ref", "w": jnp.asarray(w * mask)}
+        if K % bsk.BK == 0 and N % bsk.BN == 0:
+            w_blocks, idx = ops.pack_block_sparse(w * mask,
+                                                  np.ones_like(w, np.int32))
+            art.update(kind="value", w_blocks=w_blocks, idx=idx)
+        return art
+    # mode == "bit": per-filter INT8 scale + FTA projection, dense layout
+    # (no value pruning — same quantization step the joint pack uses)
+    q, scales = ops.quantize_int8_fta(w, np.ones_like(w, np.int32))
+    kind = "bit" if (K % ftk.BK == 0 and N % ftk.BN == 0) else "bit_ref"
+    return {"kind": kind, "q": jnp.asarray(q.astype(np.int8)),
+            "scales": jnp.asarray(scales)}
+
+
+def build_kernel_tables(named_weights: Dict[str, np.ndarray],
+                        cfg: Optional[ModelConfig] = None,
+                        mode: Optional[str] = None,
+                        value_sparsity: Optional[float] = None,
+                        ) -> Dict[str, dict]:
+    """Pack every named 2D projection for the configured kernel mode."""
+    mode = mode or (cfg.dbpim_mode if cfg is not None else "joint")
+    vs = value_sparsity if value_sparsity is not None else \
+        (cfg.dbpim_value_sparsity if cfg is not None else 0.6)
+    return {name: pack_projection(w, mode, vs)
+            for name, w in named_weights.items()}
+
+
+def kernel_dense_fn(tables: Dict[str, dict], interpret: bool = True):
+    """Build the dense_fn(w, x, name) hook for apply_mlp / attention.
+
+    Projections found in `tables` run on the packed artifact (Pallas
+    kernel or its reference fallback); anything else stays a plain
+    matmul. Kernel tilings that need M % 128 == 0 fall back to the
+    reference math for ragged activation batches.
+    """
+    from repro.kernels import block_sparse_matmul as bsk
+    from repro.kernels import fta_int8_matmul as ftk
+    from repro.kernels import ops
+
+    def mm(w, x, name):
+        t = tables.get(name)
+        if t is None or t["kind"] == "dense":
+            return x @ w
+        rows = int(np.prod(x.shape[:-1]))
+        if t["kind"] == "joint":
+            return ops.joint_dense(x, t["packed"],
+                                   interpret=interpret).astype(x.dtype)
+        if t["kind"] == "value" and rows % bsk.BM == 0:
+            return ops.sparse_dense(x, t["w_blocks"].astype(x.dtype),
+                                    t["idx"], interpret=interpret)
+        if t["kind"] in ("value", "value_ref"):
+            return x @ t["w"].astype(x.dtype)
+        if t["kind"] == "bit" and rows % ftk.BM == 0:
+            return ops.fta_dense(x, t["q"], t["scales"],
+                                 interpret=interpret).astype(x.dtype)
+        # bit_ref / ragged-M bit: same INT8 x scale math in plain jnp
+        wd = t["q"].astype(jnp.float32) * t["scales"]
+        return (x.astype(jnp.float32) @ wd).astype(x.dtype)
+
+    return mm
 
 
 # ---------------------------------------------------------------------------

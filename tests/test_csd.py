@@ -3,7 +3,12 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); skipping instead of dying at collection")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import csd, dyadic, fta, pruning, qat
 
