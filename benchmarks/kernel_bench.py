@@ -44,13 +44,55 @@ def _joint_cases(rows, smoke: bool):
         want = ref.joint_packed_ref(x, packed)
         err = float(jnp.max(jnp.abs(y - want))
                     / jnp.maximum(jnp.max(jnp.abs(want)), 1e-6))
-        # the CI guard: a kernel-vs-reference mismatch must FAIL the run,
-        # not just print a big rel_err
-        assert err < 1e-4, f"joint kernel diverged on {name}: rel_err={err}"
+        # the CI guard: a kernel-vs-reference mismatch must FAIL the run
+        # even under `python -O` (which strips bare asserts)
+        if not err < 1e-4:
+            raise RuntimeError(f"joint kernel diverged on {name}: "
+                               f"rel_err={err}")
         rows.append((f"kernel.joint.{name}", us,
                      f"bytes dense={dense_bytes} value={value_bytes} "
                      f"bit={bit_bytes} joint={joint_bytes} "
                      f"({joint_bytes/dense_bytes:.2f}x) rel_err={err:.1e}"))
+
+
+def _stacked_case(rows):
+    """Uniform-MAXB stacked pack driven through a layer scan — the smoke
+    guard for the stacked serving path: every per-layer slice must match
+    the dense reference of ITS layer, and balanced pruning must produce
+    zero padded slots."""
+    rng = np.random.default_rng(11)
+    L, M, K, N = 3, 8, 256, 256
+    ws = rng.laplace(0, 0.02, (L, K, N)).astype(np.float32)
+    packed = ops.pack_joint_sparse_stacked(ws, value_sparsity=0.5)
+    nb = np.asarray(packed.nblocks)
+    if not (nb == packed.maxb).all():
+        raise RuntimeError(f"stacked pack has padded slots: nblocks={nb} "
+                           f"vs MAXB={packed.maxb}")
+    dense = ops.unpack_joint_sparse_stacked(packed)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+
+    def body(carry, slices):
+        wb, idx, sc, nbl = slices
+        layer = ops.JointPacked(wb, idx, sc, nbl, packed.k, packed.n,
+                                packed.k_pad)
+        return carry, ops.joint_dense(carry, layer)
+
+    import jax
+    xs = (packed.w_blocks, packed.idx, packed.scales, packed.nblocks)
+    (ys,), us = timed(lambda: (jax.lax.scan(body, x, xs)[1],))
+    err = 0.0
+    for l in range(L):
+        want = x @ jnp.asarray(dense[l])
+        err = max(err, float(jnp.max(jnp.abs(ys[l] - want))
+                             / jnp.maximum(jnp.max(jnp.abs(want)), 1e-6)))
+    if not err < 1e-4:
+        raise RuntimeError(f"stacked joint scan diverged: rel_err={err}")
+    stored = ops.joint_storage_bytes(packed)
+    dense_bytes = 2 * L * K * N
+    rows.append(("kernel.joint.stacked_scan", us,
+                 f"L={L} MAXB={packed.maxb} bytes={stored} vs "
+                 f"dense_bf16={dense_bytes} ({stored/dense_bytes:.2f}x) "
+                 f"rel_err={err:.1e}"))
 
 
 def run(smoke: bool = False):
@@ -84,6 +126,9 @@ def run(smoke: bool = False):
     # joint value x bit: the paper's headline configuration
     _joint_cases(rows, smoke)
 
+    # stacked joint pack driven through a scan — the serving layout
+    _stacked_case(rows)
+
     # dbmu bit-true sim
     from repro.core import fta as fta_mod, dyadic
     q = rng.integers(-127, 128, (128, 128), dtype=np.int32)
@@ -92,7 +137,8 @@ def run(smoke: bool = False):
     xi = rng.integers(-127, 128, (16, 128), dtype=np.int32)
     got, us = timed(lambda: np.asarray(ops.dbmu_reference_check(xi, packed)))
     exact = bool((got == ref.dbmu_matmul_ref(xi, packed)).all())
-    assert exact, "DBMU bit-true equivalence broken"
+    if not exact:
+        raise RuntimeError("DBMU bit-true equivalence broken")
     rows.append(("kernel.dbmu_sim", us, f"bit_true_exact={exact}"))
     return emit(rows)
 

@@ -1,0 +1,155 @@
+"""Serving-path weight-traffic benchmark: dense vs stacked-joint decode.
+
+Measures, via the trip-aware jaxpr walker, the WEIGHT bytes one decode
+step moves through HBM on a reduced arch — once with plain dense serving,
+once with the uniform-MAXB stacked joint-sparse tables threaded through
+the decode scan — and emits the comparison as ``BENCH_serve.json``.
+
+The contract under test: at 0.5 value sparsity the joint path must move
+at most ``TARGET_RATIO`` (0.55x) of the dense-mode weight bytes — the
+``(1 - value_sparsity) * 0.5`` packed-layout saving plus index/scale
+overhead and the (mode-independent) dense unembedding. A violation
+raises: this is the CI guard that the serving graph actually changed.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
+        [--out BENCH_serve.json]
+
+Shapes note: the bench arch is the reduced family config scaled up to
+d_model=256 so the (128, 128) kernel tiles see >= 2 K-blocks per column
+— at d_model=64 a projection is a single padded tile and tile-granular
+value sparsity cannot exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params
+from repro.runtime.jaxpr_cost import analyze
+from repro.sparsity.sparse_linear import (build_stacked_tables,
+                                          reconstruct_stacked_params)
+from .common import emit
+
+TARGET_RATIO = 0.55
+VALUE_SPARSITY = 0.5
+ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
+
+
+def bench_cfg(arch: str, dtype: str = "bfloat16"):
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint")
+    cfg = cfg.scaled(name=f"{cfg.name}-bench", dtype=dtype,
+                     dbpim_value_sparsity=VALUE_SPARSITY)
+    if cfg.family == "ssm":
+        return cfg.scaled(d_model=256, ssm_state=64, ssm_head_dim=64)
+    return cfg.scaled(d_model=256, n_heads=4, n_kv_heads=2, d_ff=512)
+
+
+def _packed_bytes(tables) -> int:
+    return sum(int(a.size * a.dtype.itemsize)
+               for t in tables.arrays.values() for a in t.values())
+
+
+def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
+    # --- weight traffic at the serving dtype (bf16 dense baseline) ------
+    cfg = bench_cfg(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    if tables is None:
+        raise RuntimeError(f"{arch}: no stacked joint path — the serving "
+                           "integration this bench guards is missing")
+    cache = init_cache(cfg, batch, max_len)
+    tok = jnp.ones((batch, 1), jnp.int32)
+
+    dense_cost = analyze(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tok)
+    joint_cost = analyze(
+        lambda p, c, t: decode_step(p, c, t, cfg, tables=tables),
+        params, cache, tok)
+    dense_wb = dense_cost["weight_bytes"]
+    joint_wb = joint_cost["weight_bytes"]
+    if not dense_wb:
+        raise RuntimeError(f"{arch}: dense decode step charged zero weight "
+                           "bytes — the cost walker is broken")
+    ratio = joint_wb / dense_wb
+
+    # eligible-projection view: packed artifact vs its dense bf16 footprint
+    eligible_dense = sum(
+        2 * int(t["w_blocks"].shape[0]) * k * n      # L layers x K x N bf16
+        for name, t in tables.arrays.items()
+        for k, n in [tables.static[name][:2]])
+    packed = _packed_bytes(tables)
+
+    # --- numeric check at f32: joint decode == dense FTA reference ------
+    cfg32 = bench_cfg(arch, dtype="float32")
+    params32 = init_params(cfg32, jax.random.PRNGKey(0))
+    tables32 = build_stacked_tables(params32, cfg32)
+    recon32 = reconstruct_stacked_params(params32, tables32, cfg32)
+    cache32 = init_cache(cfg32, batch, max_len)
+    logits_j, _ = decode_step(params32, cache32, tok, cfg32, tables=tables32)
+    logits_r, _ = decode_step(recon32, cache32, tok, cfg32)
+    max_diff = float(jnp.max(jnp.abs(logits_j - logits_r)))
+    scale = float(jnp.max(jnp.abs(logits_r)))
+    if max_diff > 1e-3 * max(scale, 1.0):
+        raise RuntimeError(
+            f"{arch}: stacked joint decode diverged from the dense FTA "
+            f"reference (max_diff={max_diff}, scale={scale})")
+
+    return {
+        "arch": cfg.name, "family": cfg.family, "batch": batch,
+        "value_sparsity": VALUE_SPARSITY,
+        "dense_weight_bytes_per_step": int(dense_wb),
+        "joint_weight_bytes_per_step": int(joint_wb),
+        "ratio": ratio,
+        "eligible_dense_bf16_bytes": int(eligible_dense),
+        "packed_table_bytes": int(packed),
+        "eligible_ratio": packed / eligible_dense,
+        "max_abs_diff_vs_fta_reference": max_diff,
+        "logit_scale": scale,
+        "target_ratio": TARGET_RATIO,
+        "pass": ratio <= TARGET_RATIO,
+    }
+
+
+def run(smoke: bool = False, out: str = "BENCH_serve.json"):
+    archs = ARCHS[:1] if smoke else ARCHS
+    rows, records = [], {}
+    for arch in archs:
+        r = bench_arch(arch)
+        records[r["arch"]] = r
+        rows.append((f"serve.weight_bytes.{r['arch']}", 0.0,
+                     f"dense={r['dense_weight_bytes_per_step']} "
+                     f"joint={r['joint_weight_bytes_per_step']} "
+                     f"({r['ratio']:.3f}x, target<={TARGET_RATIO}) "
+                     f"eligible={r['eligible_ratio']:.3f}x "
+                     f"max_diff={r['max_abs_diff_vs_fta_reference']:.1e}"))
+    emit(rows)
+    payload = {"value_sparsity": VALUE_SPARSITY,
+               "target_ratio": TARGET_RATIO,
+               "smoke": smoke,
+               "archs": records,
+               "pass": all(r["pass"] for r in records.values())}
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[serve_bench] wrote {out}")
+    failures = [a for a, r in records.items() if not r["pass"]]
+    if failures:
+        raise RuntimeError(
+            f"joint serving weight traffic exceeds {TARGET_RATIO}x dense "
+            f"for {failures} — see {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="first arch only — the CI serve-path guard")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)

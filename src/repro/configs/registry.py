@@ -25,10 +25,13 @@ def get_config(arch: str, reduced: bool = False,
                dbpim_mode: str = None):
     """Load the ModelConfig for `arch`. reduced=True returns the small
     smoke-test variant of the same family. dbpim_mode selects the DB-PIM
-    kernel path ("dense" | "value" | "bit" | "joint") the compression
-    pipeline packs for (sparsity.sparse_linear.build_kernel_tables ->
-    models.layers.make_matmul; threading the resulting dense_fn through
-    the scanned layer stacks is an open ROADMAP item)."""
+    kernel path ("dense" | "value" | "bit" | "joint") the serving stack
+    packs for: launch.serve builds uniform-MAXB stacked tables
+    (sparsity.sparse_linear.build_stacked_tables) and threads them
+    through the scanned layer stacks, so "joint"/"bit" change the
+    compiled serving HLO end-to-end (dense-attention and SSM families;
+    per-layer hooks via build_kernel_tables -> models.layers.make_matmul
+    remain for the others)."""
     if arch not in _MODULES:
         raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
     mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")

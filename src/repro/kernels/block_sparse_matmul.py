@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._compat import CompilerParams, CostEstimate
+from ._compat import CompilerParams, CostEstimate, resolve_interpret
 
 BM, BK, BN = 128, 128, 128
 
@@ -45,9 +45,17 @@ def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, maxb: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def block_sparse_matmul(x, w_blocks, idx, *, interpret: bool = None):
+    """x (M, K) @ block-sparse W -> (M, N). N = NT * BN.
+
+    interpret=None resolves to the backend default (compile on TPU),
+    outside the jit boundary so the resolved bool is the cache key."""
+    return _block_sparse_matmul(x, w_blocks, idx,
+                                interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def block_sparse_matmul(x, w_blocks, idx, *, interpret: bool = True):
-    """x (M, K) @ block-sparse W -> (M, N). N = NT * BN."""
+def _block_sparse_matmul(x, w_blocks, idx, *, interpret: bool):
     M, K = x.shape
     NT, MAXB, _, _ = w_blocks.shape
     N = NT * BN

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._compat import resolve_interpret
+
 BM, BN = 8, 128
 INPUT_BITS = 8
 MAX_TERMS = 2
@@ -53,9 +55,17 @@ def _kernel(x_ref, w0_ref, w1_ref, o_ref):
     o_ref[...] = acc
 
 
+def dbmu_matmul(x_int8, packed, *, interpret: bool = None):
+    """x (M, K) int8-range int32; packed (K, N, 2) uint8 -> (M, N) int32.
+
+    interpret=None resolves to the backend default (compile on TPU),
+    outside the jit boundary so the resolved bool is the cache key."""
+    return _dbmu_matmul(x_int8, packed,
+                        interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dbmu_matmul(x_int8, packed, *, interpret: bool = True):
-    """x (M, K) int8-range int32; packed (K, N, 2) uint8 -> (M, N) int32."""
+def _dbmu_matmul(x_int8, packed, *, interpret: bool):
     M, K = x_int8.shape
     _, N, _ = packed.shape
     w0 = packed[..., 0]

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._compat import CompilerParams, CostEstimate
+from ._compat import CompilerParams, CostEstimate, resolve_interpret
 
 BM, BK, BN = 128, 512, 128
 
@@ -41,10 +41,18 @@ def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int):
                       ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
 def fta_int8_matmul(x, w_q, scales, *, out_dtype=jnp.bfloat16,
-                    interpret: bool = True):
-    """x (M, K) bf16/f32 @ (w_q (K, N) int8 * scales (1, N) f32) -> (M, N)."""
+                    interpret: bool = None):
+    """x (M, K) bf16/f32 @ (w_q (K, N) int8 * scales (1, N) f32) -> (M, N).
+
+    interpret=None resolves to the backend default (compile on TPU),
+    outside the jit boundary so the resolved bool is the cache key."""
+    return _fta_int8_matmul(x, w_q, scales, out_dtype=out_dtype,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def _fta_int8_matmul(x, w_q, scales, *, out_dtype, interpret: bool):
     M, K = x.shape
     _, N = w_q.shape
     nk = K // BK

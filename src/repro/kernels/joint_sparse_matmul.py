@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._compat import CompilerParams, CostEstimate
+from ._compat import CompilerParams, CostEstimate, resolve_interpret
 
 BM, BK, BN = 128, 128, 128
 
@@ -89,15 +89,28 @@ def _cost(M, K, NT, MAXB, bk, bn, x_itemsize, out_itemsize):
     )
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("out_dtype", "bm", "interpret"))
 def joint_sparse_matmul(x, w_blocks, idx, scales, *, out_dtype=None,
-                        bm: int = BM, interpret: bool = True):
+                        bm: int = BM, interpret: bool = None):
     """x (M, K) @ joint-packed W -> (M, N). N = NT * BN.
 
     ``w_blocks`` (NT, MAXB, BK, BN) int8, ``idx`` (NT, MAXB) int32,
     ``scales`` (1, N) f32 — see module docstring for the layout contract.
+    ``bm`` may be any sublane multiple (8 f32 / 16 bf16) — the decode path
+    uses a small row tile so a batch-4 step does not pad to 128 MXU rows.
+    interpret=None resolves to the backend default (compile on TPU,
+    interpret elsewhere; REPRO_PALLAS_INTERPRET overrides). Resolution
+    happens OUTSIDE the jit boundary so the resolved bool is the cache
+    key — flipping the env var mid-process cannot hit a stale executable.
     """
+    return _joint_sparse_matmul(x, w_blocks, idx, scales,
+                                out_dtype=out_dtype, bm=bm,
+                                interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "bm", "interpret"))
+def _joint_sparse_matmul(x, w_blocks, idx, scales, *, out_dtype,
+                         bm: int, interpret: bool):
     M, K = x.shape
     NT, MAXB, bk, bn = w_blocks.shape
     N = NT * bn

@@ -40,7 +40,7 @@ def pack_block_sparse(w_dense: np.ndarray, mask: np.ndarray,
     return jnp.asarray(w_blocks), jnp.asarray(idx)
 
 
-def sparse_dense(x, w_blocks, idx, interpret: bool = True):
+def sparse_dense(x, w_blocks, idx, interpret: bool = None):
     """Public op: block-sparse y = x @ W for 2D/3D activations."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
@@ -58,7 +58,7 @@ def fta_pack(w: jnp.ndarray, mask, value_sparsity: float = 0.0):
     return q_fta.astype(jnp.int8), scale, packed, phi
 
 
-def fta_dense(x, w_q, scales, interpret: bool = True):
+def fta_dense(x, w_q, scales, interpret: bool = None):
     """Public op: y = x @ (int8 FTA weights x per-filter scales)."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
@@ -108,6 +108,33 @@ def tile_prune_mask(w: np.ndarray, value_sparsity: float,
     return full.astype(np.int32)
 
 
+def tile_prune_mask_balanced(w: np.ndarray, value_sparsity: float,
+                             bk: int = BK, bn: int = BN) -> np.ndarray:
+    """Column-balanced tile pruning: drop the lowest-L2 ``round(vs * kt)``
+    K-tiles in EVERY N-tile column (ceil + crop for ragged shapes).
+
+    Unlike ``tile_prune_mask`` (global lowest-norm tiles, variable
+    survivors per column), every column keeps exactly the same number of
+    K-blocks — so MAXB == the survivor count, the packed layout carries
+    ZERO padded slots, and a whole layer stack packs to one shared MAXB.
+    This is the uniformity SparseP-style PIM serving needs: stored bytes
+    equal ``(1 - vs)`` of dense exactly, per layer, per column.
+    """
+    K, N = w.shape
+    kt, nt = -(-K // bk), -(-N // bn)
+    wp = np.zeros((kt * bk, nt * bn), np.float32)
+    wp[:K, :N] = w
+    norms = (wp.reshape(kt, bk, nt, bn) ** 2).sum(axis=(1, 3))   # (kt, nt)
+    n_drop = min(int(round(value_sparsity * kt)), kt - 1)
+    alive = np.ones((kt, nt), bool)
+    if n_drop > 0:
+        order = np.argsort(norms, axis=0)                        # ascending
+        for c in range(nt):
+            alive[order[:n_drop, c], c] = False
+    full = np.repeat(np.repeat(alive, bk, 0), bn, 1)[:K, :N]
+    return full.astype(np.int32)
+
+
 def quantize_int8_fta(w: np.ndarray, mask: np.ndarray,
                       fta_project: bool = True):
     """The bit-level compression step, shared by every packing path:
@@ -143,6 +170,48 @@ class JointPacked(NamedTuple):
     k_pad: int
 
 
+def _tile_alive(m: np.ndarray, bk: int, bn: int) -> np.ndarray:
+    """(kt, nt) bool: does the (bk, bn) mask tile keep any weight? Pads
+    ragged shapes with zeros — THE survivor rule, shared by the per-layer
+    pack and the stacked shared-MAXB pre-pass so they cannot drift."""
+    K, N = m.shape
+    kt, nt = -(-K // bk), -(-N // bn)
+    mp = np.zeros((kt * bk, nt * bn), np.int32)
+    mp[:K, :N] = m
+    return mp.reshape(kt, bk, nt, bn).sum(axis=(1, 3)) > 0
+
+
+def _quantize_and_compact(w, m, bk, bn, fta_project, maxb=None):
+    """Pad -> INT8/FTA quantize -> compact one 2D layer. Returns numpy
+    (w_blocks, idx, nblocks, scales, Kp, Np). maxb forces the slot count
+    (stacked packs share one MAXB across layers); None uses this layer's
+    own survivor maximum."""
+    alive = _tile_alive(m, bk, bn)                              # (kt, nt)
+    K, N = w.shape
+    kp, npad = (-K) % bk, (-N) % bn
+    w = np.pad(w, ((0, kp), (0, npad)))
+    m = np.pad(m, ((0, kp), (0, npad)))
+    Kp, Np = w.shape
+
+    q, scales = quantize_int8_fta(w, m, fta_project=fta_project)
+    q = q.astype(np.int8)
+
+    kt, nt = Kp // bk, Np // bn
+    if maxb is None:
+        maxb = max(int(alive.sum(axis=0).max()), 1)
+    tiles = q.reshape(kt, bk, nt, bn)
+    w_blocks = np.zeros((nt, maxb, bk, bn), np.int8)
+    idx = np.zeros((nt, maxb), np.int32)
+    nblocks = np.zeros((nt,), np.int32)
+    for n_t in range(nt):
+        rows = np.nonzero(alive[:, n_t])[0]
+        nblocks[n_t] = rows.size
+        for b, kblk in enumerate(rows):
+            w_blocks[n_t, b] = tiles[kblk, :, n_t, :]
+            idx[n_t, b] = kblk
+    return w_blocks, idx, nblocks, scales.reshape(1, Np), Kp, Np
+
+
 def pack_joint_sparse(w_dense, mask=None, *, bk: int = BK, bn: int = BN,
                       value_sparsity: float = None,
                       fta_project: bool = True) -> JointPacked:
@@ -162,31 +231,93 @@ def pack_joint_sparse(w_dense, mask=None, *, bk: int = BK, bn: int = BN,
              else np.ones_like(w, np.int32))
     else:
         m = np.asarray(mask, np.int32)
-    kp, npad = (-K) % bk, (-N) % bn
-    w = np.pad(w, ((0, kp), (0, npad)))
-    m = np.pad(m, ((0, kp), (0, npad)))
-    Kp, Np = w.shape
-
-    q, scales = quantize_int8_fta(w, m, fta_project=fta_project)
-    q = q.astype(np.int8)
-    scales = scales.reshape(-1)
-
-    kt, nt = Kp // bk, Np // bn
-    alive = m.reshape(kt, bk, nt, bn).sum(axis=(1, 3)) > 0      # (kt, nt)
-    maxb = max(int(alive.sum(axis=0).max()), 1)
-    tiles = q.reshape(kt, bk, nt, bn)
-    w_blocks = np.zeros((nt, maxb, bk, bn), np.int8)
-    idx = np.zeros((nt, maxb), np.int32)
-    nblocks = np.zeros((nt,), np.int32)
-    for n_t in range(nt):
-        rows = np.nonzero(alive[:, n_t])[0]
-        nblocks[n_t] = rows.size
-        for b, kblk in enumerate(rows):
-            w_blocks[n_t, b] = tiles[kblk, :, n_t, :]
-            idx[n_t, b] = kblk
+    w_blocks, idx, nblocks, scales, Kp, _ = _quantize_and_compact(
+        w, m, bk, bn, fta_project)
     return JointPacked(jnp.asarray(w_blocks), jnp.asarray(idx),
-                       jnp.asarray(scales.reshape(1, Np)),
-                       jnp.asarray(nblocks), K, N, Kp)
+                       jnp.asarray(scales), jnp.asarray(nblocks), K, N, Kp)
+
+
+class JointPackedStacked(NamedTuple):
+    """Joint artifact for ALL L layers of one projection family, packed
+    with one shared MAXB (= max survivors over layers; slots past a
+    layer's real block count are zero payload, which the kernel treats as
+    exact zeros). Every field is a single stacked array with a leading
+    layer axis — the layout ``lax.scan`` can carry as per-layer xs, which
+    is what lets the serving graph run the joint kernel end-to-end
+    instead of per-layer.
+
+    ``w_blocks`` (L, NT, MAXB, bk, bn) int8 / ``idx`` (L, NT, MAXB) int32
+    / ``scales`` (L, 1, N_pad) f32 / ``nblocks`` (L, NT) int32.
+    ``k``/``n``/``k_pad`` are shared static dims (identical across the
+    stack by construction).
+    """
+    w_blocks: jnp.ndarray
+    idx: jnp.ndarray
+    scales: jnp.ndarray
+    nblocks: jnp.ndarray
+    k: int
+    n: int
+    k_pad: int
+
+    @property
+    def maxb(self) -> int:
+        return self.w_blocks.shape[2]
+
+
+def pack_joint_sparse_stacked(w_stack, masks=None, *, bk: int = BK,
+                              bn: int = BN, value_sparsity: float = None,
+                              fta_project: bool = True,
+                              ) -> JointPackedStacked:
+    """Stack-uniform joint compilation of (L, K, N) layer weights.
+
+    Per layer: column-balanced tile pruning (``tile_prune_mask_balanced``
+    — every N-tile column keeps the same number of K-blocks, so with no
+    explicit masks MAXB is exactly ``kt - round(vs * kt)`` and NO padded
+    slots exist anywhere in the stack) -> per-filter INT8/FTA
+    quantization -> compaction into the shared-MAXB layout. With explicit
+    ragged ``masks`` (L, K, N), MAXB is the max survivor count over the
+    whole stack and short layers pad with zero-payload slots.
+    """
+    w_stack = np.asarray(w_stack, np.float32)
+    if w_stack.ndim != 3 or not w_stack.shape[0]:
+        raise ValueError(f"w_stack must be (L, K, N), got {w_stack.shape}")
+    L, K, N = w_stack.shape
+    if masks is None:
+        ms = [(tile_prune_mask_balanced(w_stack[l], value_sparsity, bk, bn)
+               if value_sparsity else np.ones((K, N), np.int32))
+              for l in range(L)]
+    else:
+        ms = [np.asarray(np.asarray(masks)[l], np.int32) for l in range(L)]
+
+    # shared MAXB: max surviving K-blocks over every (layer, column) pair
+    maxb = max(1, max(int(_tile_alive(ms[l], bk, bn).sum(axis=0).max())
+                      for l in range(L)))
+
+    wbs, idxs, nbs, scs = [], [], [], []
+    for l in range(L):
+        wb, idx, nb, sc, Kp, _ = _quantize_and_compact(
+            w_stack[l], ms[l], bk, bn, fta_project, maxb=maxb)
+        wbs.append(wb)
+        idxs.append(idx)
+        nbs.append(nb)
+        scs.append(sc)
+    return JointPackedStacked(
+        jnp.asarray(np.stack(wbs)), jnp.asarray(np.stack(idxs)),
+        jnp.asarray(np.stack(scs)), jnp.asarray(np.stack(nbs)),
+        K, N, Kp)
+
+
+def slice_joint_stacked(packed: JointPackedStacked, l: int) -> JointPacked:
+    """Layer l's view of a stacked pack (the scan body does the same
+    slicing implicitly through its xs)."""
+    return JointPacked(packed.w_blocks[l], packed.idx[l], packed.scales[l],
+                       packed.nblocks[l], packed.k, packed.n, packed.k_pad)
+
+
+def unpack_joint_sparse_stacked(packed: JointPackedStacked) -> np.ndarray:
+    """Invert pack_joint_sparse_stacked -> dense fp32 (L, K, N)."""
+    return np.stack([unpack_joint_sparse(slice_joint_stacked(packed, l))
+                     for l in range(packed.w_blocks.shape[0])])
 
 
 def unpack_joint_sparse(packed: JointPacked) -> np.ndarray:
@@ -205,32 +336,48 @@ def unpack_joint_sparse(packed: JointPacked) -> np.ndarray:
     return dense[:packed.k, :packed.n]
 
 
-def joint_storage_bytes(packed: JointPacked) -> int:
-    """HBM bytes of the joint artifact (payload + index + scales)."""
+def joint_storage_bytes(packed) -> int:
+    """HBM bytes of a joint artifact (payload + index + scales); accepts
+    JointPacked or JointPackedStacked (same field names)."""
     return int(packed.w_blocks.size + packed.idx.size * 4
                + packed.scales.size * 4)
 
 
-def joint_dense(x, packed: JointPacked, interpret: bool = True):
+def pick_row_tile(m: int, dtype) -> int:
+    """Decode-tuned row tile: full 128-row MXU tiles for big batches, the
+    smallest legal sublane multiple for small ones — a batch-4 decode
+    step pads its activations to 8 (f32) / 16 (bf16) rows, not 128."""
+    if m >= JBM:
+        return JBM
+    sub = 8 if jnp.dtype(dtype).itemsize >= 4 else 16
+    return max(sub, sub * (-(-m // sub)))
+
+
+def joint_dense(x, packed: JointPacked, interpret: bool = None,
+                bm: int = None):
     """Public op: joint value x bit sparse y = x @ W for 2D/3D activations.
 
     Pads M to the kernel row tile and K to the packed K (both zero — padded
     K columns hit only pruned weight rows), slices the result back.
+    bm=None picks the row tile from M (small-M decode tile; see
+    pick_row_tile); interpret=None uses the backend default.
     """
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     M, K = x2.shape
     if K != packed.k:
         raise ValueError(f"activation K={K} != packed k={packed.k}")
-    mp = (-M) % JBM
+    if bm is None:
+        bm = pick_row_tile(M, x.dtype)
+    mp = (-M) % bm
     x2 = jnp.pad(x2, ((0, mp), (0, packed.k_pad - K)))
     y = joint_sparse_matmul(x2, packed.w_blocks, packed.idx, packed.scales,
-                            interpret=interpret)
+                            bm=bm, interpret=interpret)
     y = y[:M, :packed.n]
     return y.reshape(shape[:-1] + (packed.n,))
 
 
-def dbmu_reference_check(x_int8, packed, interpret: bool = True):
+def dbmu_reference_check(x_int8, packed, interpret: bool = None):
     """Run the bit-true DBMU datapath."""
     return dbmu_matmul(jnp.asarray(x_int8, jnp.int32),
                        jnp.asarray(packed), interpret=interpret)

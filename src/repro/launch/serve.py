@@ -7,6 +7,11 @@ A static decode batch of `batch` slots runs lock-step single-token steps
 (the TPU-efficient regime); finished slots (EOS or length budget) are
 refilled from the request queue — continuous batching with a fixed-shape
 program, no re-compilation per request.
+
+``--dbpim-mode joint`` packs every layer's projections into the
+uniform-MAXB joint-sparse stacked layout once at startup and threads
+them through the decode scan — the whole network serves off the DB-PIM
+kernel ((1 - value_sparsity) * 0.5 of dense bf16 weight traffic).
 """
 
 from __future__ import annotations
@@ -35,12 +40,41 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dbpim-mode", default=None,
+                    choices=["dense", "value", "bit", "joint"],
+                    help="serve through the DB-PIM kernel path (joint = "
+                         "value x bit sparse, the paper's headline config)")
+    ap.add_argument("--value-sparsity", type=float, default=None,
+                    help="tile-granular value sparsity for --dbpim-mode "
+                         "joint (default: cfg.dbpim_value_sparsity)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    cfg = get_config(args.arch, reduced=args.reduced,
+                     dbpim_mode=args.dbpim_mode)
     mesh = make_test_mesh()
     rng = np.random.default_rng(args.seed)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    stacked_tables = None
+    if cfg.dbpim and cfg.dbpim_mode != "dense":
+        from repro.sparsity.sparse_linear import (build_stacked_tables,
+                                                  strip_packed_projections)
+        stacked_tables = build_stacked_tables(
+            params, cfg, value_sparsity=args.value_sparsity)
+        if stacked_tables is None:
+            print(f"[serve] {args.arch}: no stacked joint path for this "
+                  f"family/mode; serving dense")
+        else:
+            # the packed tables now serve these matmuls — drop the dense
+            # copies so serving HBM shrinks instead of doubling
+            params = strip_packed_projections(params, cfg)
+            nbytes = sum(int(a.size * a.dtype.itemsize)
+                         for t in stacked_tables.arrays.values()
+                         for a in t.values())
+            print(f"[serve] dbpim_mode={cfg.dbpim_mode}: "
+                  f"{len(stacked_tables.arrays)} projection families "
+                  f"packed, {nbytes/1e6:.2f} MB stacked tables "
+                  f"(dense copies stripped)")
 
     enc_out = None
     if cfg.is_encdec:
@@ -50,7 +84,8 @@ def main(argv=None):
 
     with mesh:
         cache = init_cache(cfg, args.batch, args.max_len, enc_out=enc_out)
-        step_fn, shard_fn = build_serve_step(cfg, mesh)
+        step_fn, shard_fn = build_serve_step(cfg, mesh,
+                                             stacked_tables=stacked_tables)
         token0 = jnp.zeros((args.batch, 1), jnp.int32)
         pspec, cspec, tspec = shard_fn(params, cache, token0)
         jitted = jax.jit(step_fn,

@@ -108,16 +108,29 @@ def _moment_specs(params, pspecs, moments, mesh):
 
 
 def build_serve_step(cfg: ModelConfig, mesh: Mesh,
-                     int8_weights: bool = False):
+                     int8_weights: bool = False, stacked_tables=None):
     """int8_weights=True: projections live in HBM as INT8 + per-filter
     scale (the FTA/DB-PIM serving format) and are dequantized in-graph —
-    the dequant fuses into the matmuls, halving decode weight traffic."""
+    the dequant fuses into the matmuls, halving decode weight traffic.
+
+    stacked_tables (sparsity.sparse_linear.StackedKernelTables, from
+    build_stacked_tables(params, cfg)): the uniform-MAXB joint-sparse
+    weight packs ride the decode-step layer scan, so every projection of
+    every layer runs the DB-PIM Pallas kernel — the compiled serving HLO
+    changes (weight traffic (1 - vs) * 0.5 of dense bf16). Mutually
+    exclusive with int8_weights (the tables already carry INT8 payloads).
+    """
+    if int8_weights and stacked_tables is not None:
+        raise ValueError("int8_weights and stacked_tables are mutually "
+                         "exclusive serving formats")
+
     def serve_step(params, cache, token):
         if int8_weights:
             from repro.sparsity.sparse_linear import \
                 dequant_params_for_serving
             params = dequant_params_for_serving(params)
-        return decode_step(params, cache, token, cfg)
+        return decode_step(params, cache, token, cfg,
+                           tables=stacked_tables)
 
     def shardings(params, cache, token):
         # Serving keeps weights RESIDENT (TP-sharded, replicated over DP):

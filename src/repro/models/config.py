@@ -94,6 +94,18 @@ class ModelConfig:
         """Sub-quadratic support: SSM, hybrid, or sliding-window attention."""
         return self.family in ("ssm", "hybrid") or self.window > 0
 
+    @property
+    def supports_stacked_tables(self) -> bool:
+        """Families whose serving forwards are ONE homogeneous layer scan
+        — the ones the stacked joint-sparse tables can ride end-to-end.
+        Hybrid periods, enc-dec stacks, and MoE blocks mix sublayer kinds
+        inside a scan step (ROADMAP items). Single source of truth for
+        build_stacked_tables and the forward/decode guards."""
+        if self.family == "ssm":
+            return True
+        return bool(self.n_heads) and not self.n_experts \
+            and not self.is_encdec and self.family != "hybrid"
+
     def scaled(self, **kw) -> "ModelConfig":
         return replace(self, **kw)
 

@@ -50,8 +50,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 # Decode step
 # ---------------------------------------------------------------------------
 
-def decode_step(params, cache, token, cfg: ModelConfig):
-    """token (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
+    """token (B, 1) int32 -> (logits (B, 1, V), new cache).
+
+    tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
+    joint-sparse projection packs whose arrays ride the layer scan as xs
+    (next to the per-layer cache slices), so every decode-step projection
+    runs the DB-PIM kernel. Supported for the dense-attention and SSM
+    family scans; None keeps the plain matmuls.
+    """
+    if tables is not None and not cfg.supports_stacked_tables:
+        raise ValueError(f"stacked kernel tables are not supported for "
+                         f"{cfg.name} (mixed-sublayer or MoE scan)")
+
+    def layer_mm(slices):
+        return tables.dense_fn(slices) if tables is not None else None
+
+    txs = tables.arrays if tables is not None else None
     pos = cache["pos"]
     x = embed_tokens(params["embed"], token, cfg)
     if cfg.rope_pct == 0:
@@ -67,14 +82,14 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
     if cfg.family == "ssm":
         def step(h, inp):
-            p, conv, state = inp
+            p, conv, state, slices = inp
             hn = apply_norm(p["norm1"], h, cfg)
             y, new_conv, new_state = ssm_mod.decode_ssm(
-                p["ssm"], hn, conv, state, cfg)
+                p["ssm"], hn, conv, state, cfg, dense_fn=layer_mm(slices))
             return h + y, (new_conv, new_state)
         x, (convs, states) = jax.lax.scan(
             step, x, (params["blocks"], cache["ssm"]["conv"],
-                      cache["ssm"]["state"]))
+                      cache["ssm"]["state"], txs))
         new_cache["ssm"] = {"conv": convs, "state": states}
 
     elif cfg.family == "hybrid":
@@ -128,20 +143,21 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
     else:
         def step(h, inp):
-            p, ck, cv = inp
+            p, ck, cv, slices = inp
+            mm = layer_mm(slices)
             hn = apply_norm(p["norm1"], h, cfg)
             y, ck, cv = attn_mod.decode_attention(p["attn"], hn, ck, cv,
-                                                  pos, cfg)
+                                                  pos, cfg, dense_fn=mm)
             h = h + y
             hn2 = apply_norm(p["norm2"], h, cfg)
             if cfg.n_experts:
                 y2, _ = moe_mod.apply_moe_block(p["moe"], hn2, cfg)
             else:
-                y2 = apply_mlp(p["mlp"], hn2, cfg)
+                y2 = apply_mlp(p["mlp"], hn2, cfg, dense_fn=mm)
             return h + y2, (ck, cv)
         x, (cks, cvs) = jax.lax.scan(
             step, x, (params["blocks"], cache["attn"]["k"],
-                      cache["attn"]["v"]))
+                      cache["attn"]["v"], txs))
         new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
 
     new_cache["pos"] = pos + 1
@@ -150,10 +166,11 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
 
 def prefill(params, tokens, cfg: ModelConfig,
-            frames: Optional[jnp.ndarray] = None):
+            frames: Optional[jnp.ndarray] = None, tables=None):
     """Prefill returns last-position logits. (The dry-run lowers the full
     forward; serving fills the cache by running decode positions — a
     chunked cache-filling prefill is a TODO noted in DESIGN.md.)"""
     from .transformer import forward
     enc_out = encode(params, frames, cfg) if cfg.is_encdec else None
-    return forward(params, tokens, cfg, enc_out=enc_out, last_only=True)
+    return forward(params, tokens, cfg, enc_out=enc_out, last_only=True,
+                   tables=tables)

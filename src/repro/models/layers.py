@@ -86,7 +86,7 @@ def init_mlp(cfg: ModelConfig, key, d: int, f: int):
             "w_down": (jax.random.normal(k2, (f, d)) * s_out).astype(dt)}
 
 
-def make_matmul(cfg: ModelConfig, tables=None, interpret: bool = True):
+def make_matmul(cfg: ModelConfig, tables=None, interpret: bool = None):
     """dense_fn factory for apply_mlp / attention.
 
     When ``cfg.dbpim`` is set and packed kernel tables (from
@@ -95,11 +95,14 @@ def make_matmul(cfg: ModelConfig, tables=None, interpret: bool = True):
     ``cfg.dbpim_mode`` — "joint" fuses value-level block skipping with
     bit-level INT8 weights in one kernel. Returns None (plain matmuls)
     otherwise, so call sites can pass the result straight through.
+    interpret=None uses the backend default (compile on TPU, interpret
+    elsewhere; REPRO_PALLAS_INTERPRET overrides).
 
-    Scope note: apply_mlp / attention accept the returned dense_fn
-    per-layer; the scan-stacked transformer forwards do not thread it
-    yet (packed tables are per-layer pytrees of ragged MAXB, which
-    lax.scan cannot carry) — that serving integration is a ROADMAP item.
+    Scope note: this is the PER-LAYER hook (single unstacked tables).
+    The scan-stacked serving forwards thread
+    ``sparsity.sparse_linear.StackedKernelTables`` instead — uniform-MAXB
+    stacked packs carried as scan xs (transformer.forward(tables=...),
+    decode.decode_step(tables=...)).
     """
     if not getattr(cfg, "dbpim", False) or not tables:
         return None

@@ -72,15 +72,20 @@ def _gated_norm(y, z, scale, eps=1e-6):
     return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
 
 
-def apply_ssm(p, x, cfg: ModelConfig):
-    """Training / prefill forward. x (B, L, D) -> (B, L, D)."""
+def apply_ssm(p, x, cfg: ModelConfig, dense_fn=None):
+    """Training / prefill forward. x (B, L, D) -> (B, L, D).
+
+    dense_fn(w, x, name) intercepts the in/out projections (the DB-PIM
+    sparse serving path); the chunked state scan itself is projection-free
+    so the hook wraps it cleanly on both sides."""
+    mm = dense_fn or (lambda w, v, name: v @ w)
     Bsz, L, _ = x.shape
     d_in, nh, N, P = ssm_dims(cfg)
     Q = min(cfg.ssm_chunk, L)
     assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
     nc = L // Q
 
-    z, xbc, dt_raw = _split_proj(x @ p["in_proj"], cfg)
+    z, xbc, dt_raw = _split_proj(mm(p["in_proj"], x, "in_proj"), cfg)
     xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
     xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
     xs = xs.reshape(Bsz, L, nh, P)
@@ -128,7 +133,7 @@ def apply_ssm(p, x, cfg: ModelConfig):
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, nh, P)
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(Bsz, L, d_in).astype(x.dtype)
-    return _gated_norm(y, z, p["norm_scale"]) @ p["out_proj"]
+    return mm(p["out_proj"], _gated_norm(y, z, p["norm_scale"]), "out_proj")
 
 
 # ------------------------------------------------------------ decode -------
@@ -143,12 +148,14 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int):
     }
 
 
-def decode_ssm(p, x, conv_state, ssm_state, cfg: ModelConfig):
+def decode_ssm(p, x, conv_state, ssm_state, cfg: ModelConfig,
+               dense_fn=None):
     """One-token decode. x (B, 1, D); conv_state (B, W-1, C);
     ssm_state (B, nh, P, N). Returns (y, new_conv, new_state)."""
+    mm = dense_fn or (lambda w, v, name: v @ w)
     Bsz = x.shape[0]
     d_in, nh, N, P = ssm_dims(cfg)
-    z, xbc, dt_raw = _split_proj(x[:, 0] @ p["in_proj"], cfg)
+    z, xbc, dt_raw = _split_proj(mm(p["in_proj"], x[:, 0], "in_proj"), cfg)
     window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)
     conv = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
     xbc_t = jax.nn.silu(conv)
@@ -162,5 +169,6 @@ def decode_ssm(p, x, conv_state, ssm_state, cfg: ModelConfig):
     y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), new_state)
     y = y + xs * p["D"][None, :, None]
     y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
-    out = _gated_norm(y, z[:, None, :], p["norm_scale"]) @ p["out_proj"]
+    out = mm(p["out_proj"], _gated_norm(y, z[:, None, :], p["norm_scale"]),
+             "out_proj")
     return out, window[:, 1:], new_state

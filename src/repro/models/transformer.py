@@ -127,19 +127,20 @@ def _sinusoidal(S: int, d: int, dtype):
     return pe.astype(dtype)
 
 
-def _dense_block_fwd(p, x, cfg: ModelConfig, positions):
+def _dense_block_fwd(p, x, cfg: ModelConfig, positions, mm=None):
     h = x + attn_mod.attention(p["attn"], apply_norm(p["norm1"], x, cfg),
-                               cfg, positions)
+                               cfg, positions, dense_fn=mm)
     hn = apply_norm(p["norm2"], h, cfg)
     if cfg.n_experts:
         y, _aux = moe_mod.apply_moe_block(p["moe"], hn, cfg)
     else:
-        y = apply_mlp(p["mlp"], hn, cfg)
+        y = apply_mlp(p["mlp"], hn, cfg, dense_fn=mm)
     return h + y
 
 
-def _ssm_block_fwd(p, x, cfg: ModelConfig):
-    return x + ssm_mod.apply_ssm(p["ssm"], apply_norm(p["norm1"], x, cfg), cfg)
+def _ssm_block_fwd(p, x, cfg: ModelConfig, mm=None):
+    return x + ssm_mod.apply_ssm(p["ssm"], apply_norm(p["norm1"], x, cfg),
+                                 cfg, dense_fn=mm)
 
 
 def _hybrid_period_fwd(p, x, cfg: ModelConfig, positions):
@@ -166,18 +167,32 @@ def _hybrid_period_fwd(p, x, cfg: ModelConfig, positions):
     return x
 
 
-def _scan_stack(blocks, x, body, remat: bool, policy: str = "full"):
+def _scan_stack(blocks, x, body, remat: bool, policy: str = "full",
+                tables=None):
+    """Scan the stacked layer params through `body(layer_params, h, mm)`.
+
+    `tables` (sparsity.sparse_linear.StackedKernelTables) rides the scan
+    as extra xs: each step receives its layer's slice of the uniform-MAXB
+    packed weights and rebuilds the dense_fn hook, so the joint DB-PIM
+    kernel serves EVERY layer while the HLO stays O(1) in depth. mm is
+    None on the plain (dense) path.
+    """
+    def wrapped(layer_params, carry, slices):
+        mm = tables.dense_fn(slices) if tables is not None else None
+        return body(layer_params, carry, mm)
     if remat and policy == "dots":
         fn = jax.checkpoint(
-            body,
+            wrapped,
             policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
     elif remat:
-        fn = jax.checkpoint(body)
+        fn = jax.checkpoint(wrapped)
     else:
-        fn = body
-    def step(carry, layer_params):
-        return fn(layer_params, carry), None
-    out, _ = jax.lax.scan(step, x, blocks)
+        fn = wrapped
+    xs = (blocks, tables.arrays if tables is not None else None)
+    def step(carry, inp):
+        layer_params, slices = inp
+        return fn(layer_params, carry, slices), None
+    out, _ = jax.lax.scan(step, x, xs)
     return out
 
 
@@ -185,7 +200,7 @@ def encode(params, frames, cfg: ModelConfig):
     """Whisper encoder over stub frame embeddings (B, Se, D)."""
     x = frames + _sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
 
-    def body(p, h):
+    def body(p, h, mm):
         hn = apply_norm(p["norm1"], h, cfg)
         h = h + attn_mod.attention(p["attn"], hn, cfg,
                                    jnp.zeros(h.shape[:2], jnp.int32),
@@ -200,7 +215,8 @@ def encode(params, frames, cfg: ModelConfig):
 def forward(params, tokens, cfg: ModelConfig,
             frontend_embeds: Optional[jnp.ndarray] = None,
             enc_out: Optional[jnp.ndarray] = None,
-            last_only: bool = False):
+            last_only: bool = False,
+            tables=None):
     """Full-sequence forward to logits.
 
     frontend_embeds: VLM patch embeddings (B, n_patches, D) prepended to
@@ -208,6 +224,9 @@ def forward(params, tokens, cfg: ModelConfig,
     only. enc_out: whisper encoder output for cross-attention.
     last_only: unembed only the final position (prefill) — at 150k vocab,
     unembedding all 32k positions would dominate prefill compute/memory.
+    tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
+    joint-sparse projections that ride the layer scan as xs, so the
+    DB-PIM kernel serves every layer (dense / SSM families).
     """
     B, S = tokens.shape
     x = embed_tokens(params["embed"], tokens, cfg)
@@ -221,14 +240,20 @@ def forward(params, tokens, cfg: ModelConfig,
     positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
                                  (B, x.shape[1]))
 
+    if tables is not None and not cfg.supports_stacked_tables:
+        raise ValueError(f"stacked kernel tables are not supported for the "
+                         f"{cfg.family} family yet (mixed-sublayer or MoE "
+                         f"scans)")
+
     if cfg.family == "ssm":
-        body = lambda p, h: _ssm_block_fwd(p, h, cfg)
-        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
+        body = lambda p, h, mm: _ssm_block_fwd(p, h, cfg, mm)
+        x = _scan_stack(params["blocks"], x, body, cfg.remat,
+                        cfg.remat_policy, tables=tables)
     elif cfg.family == "hybrid":
-        body = lambda p, h: _hybrid_period_fwd(p, h, cfg, positions)
+        body = lambda p, h, mm: _hybrid_period_fwd(p, h, cfg, positions)
         x = _scan_stack(params["periods"], x, body, cfg.remat, cfg.remat_policy)
     elif cfg.is_encdec:
-        def body(p, h):
+        def body(p, h, mm):
             hn = apply_norm(p["norm1"], h, cfg)
             h = h + attn_mod.attention(p["attn"], hn, cfg, positions)
             hx = apply_norm(p["norm_x"], h, cfg)
@@ -236,8 +261,9 @@ def forward(params, tokens, cfg: ModelConfig,
             return h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
         x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
     else:
-        body = lambda p, h: _dense_block_fwd(p, h, cfg, positions)
-        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
+        body = lambda p, h, mm: _dense_block_fwd(p, h, cfg, positions, mm)
+        x = _scan_stack(params["blocks"], x, body, cfg.remat,
+                        cfg.remat_policy, tables=tables)
 
     x = apply_norm(params["final_norm"], x, cfg)
     if n_front:

@@ -13,6 +13,19 @@ stationary-per-step schedule); other ops count result bytes only
 freshly-written result, already counted). Gather/scatter count operand +
 result. This is an estimate — it cannot see XLA's actual fusion — but it
 is trip-correct, which dominates the error.
+
+WEIGHT traffic (`weight_bytes`): the decode roofline term the DB-PIM
+serving path attacks. Heuristics, documented because they are heuristics:
+  * dot_general: the rhs operand when it is rank-2 with no batch dims —
+    every projection in this codebase is `x @ W` with a 2D weight, while
+    attention/SSM einsums carry batch dims or higher rank. Charged
+    through `convert_src`, so an int8 weight dequantized in-graph
+    charges 1 B/element.
+  * pallas_call: every operand that is NOT a plain rank-2 float
+    activation — i.e. integer payloads/index tables (int8 w_blocks,
+    int32 idx) plus rank-2 floats with a leading broadcast dim of 1
+    (per-filter scales) and float operands of rank != 2 (block payloads).
+    For the packed kernels this is exactly payload + idx + scales.
 """
 
 from __future__ import annotations
@@ -60,6 +73,23 @@ _SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
                     "body_jaxpr")
 
 
+def _is_pallas_weight(aval) -> bool:
+    """Weight-operand heuristic for pallas_call (see module docstring):
+    everything except a plain rank-2 float activation counts as stored
+    weight/metadata — int8 payloads, int32 index tables, (1, N) scales,
+    rank>2 block payloads. Known limit: an INTEGER activation (only the
+    dbmu bit-true oracle, which no serving graph contains) would be
+    misclassified as weight."""
+    try:
+        kind = np.dtype(aval.dtype).kind
+        shape = tuple(aval.shape)
+    except Exception:
+        return False
+    if kind in ("i", "u"):
+        return True
+    return kind == "f" and (len(shape) != 2 or shape[0] == 1)
+
+
 def _walk(jaxpr, mult: int, acc: Dict[str, float],
           convert_src: Dict[Any, Any] = None):
     # convert_src: var -> pre-convert var, so a dot whose operand is a
@@ -81,6 +111,12 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                 op_bytes += _bytes(src.aval)
             acc["bytes"] += (op_bytes
                              + _bytes(eqn.outvars[0].aval)) * mult
+            # projection weight traffic: rank-2 rhs with no batch dims
+            # (x @ W); attention/SSM einsum dots have batch dims or rank>2
+            _, (_, rb) = eqn.params["dimension_numbers"]
+            rhs = convert_src.get(eqn.invars[1], eqn.invars[1])
+            if len(getattr(rhs.aval, "shape", ())) == 2 and not rb:
+                acc["weight_bytes"] += _bytes(rhs.aval) * mult
             continue
         if prim == "pallas_call":
             # Custom kernel (e.g. joint_sparse_matmul): its inner jaxpr
@@ -113,6 +149,9 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                  + sum(_bytes(v.aval) for v in eqn.outvars)) * mult
             acc["bytes"] += b
             acc["pallas_bytes"] += b
+            acc["weight_bytes"] += sum(
+                _bytes(v.aval) for v in eqn.invars
+                if _is_pallas_weight(v.aval)) * mult
             continue
         if prim == "scan":
             length = int(eqn.params.get("length", 1))
@@ -163,7 +202,7 @@ def analyze(fn, *args) -> Dict[str, float]:
     """Trip-aware cost of `fn(*args)` (args may be ShapeDtypeStructs)."""
     closed = jax.make_jaxpr(fn)(*args)
     acc = {"flops": 0.0, "dot_flops": 0.0, "bytes": 0.0,
-           "pallas_flops": 0.0, "pallas_bytes": 0.0}
+           "pallas_flops": 0.0, "pallas_bytes": 0.0, "weight_bytes": 0.0}
     _walk(closed.jaxpr, 1, acc)
     # argument + result residency: params/opt-state are read and written
     # once per step regardless of op-level traffic.

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -218,7 +218,7 @@ def build_kernel_tables(named_weights: Dict[str, np.ndarray],
             for name, w in named_weights.items()}
 
 
-def kernel_dense_fn(tables: Dict[str, dict], interpret: bool = True):
+def kernel_dense_fn(tables: Dict[str, dict], interpret: bool = None):
     """Build the dense_fn(w, x, name) hook for apply_mlp / attention.
 
     Projections found in `tables` run on the packed artifact (Pallas
@@ -251,6 +251,159 @@ def kernel_dense_fn(tables: Dict[str, dict], interpret: bool = True):
         return (x.astype(jnp.float32) @ wd).astype(x.dtype)
 
     return mm
+
+
+# ---------------------------------------------------------------------------
+# Stacked serving tables: ALL L layers of every projection family packed
+# with one shared MAXB, as scan-carryable arrays. This is what lets
+# `lax.scan`-stacked forwards (transformer / SSM / decode) run the joint
+# kernel end-to-end instead of per-layer: the scan slices the leading
+# layer axis, the body rebuilds the per-layer JointPacked view and
+# dispatches through the same dense_fn(w, x, name) hook the layers
+# already accept.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StackedKernelTables:
+    """Scan-carryable joint-sparse weights for a whole layer stack.
+
+    ``arrays`` is a pytree of stacked jnp arrays (leading axis = layer) —
+    pass it as scan xs next to the stacked params. ``static`` holds the
+    per-projection (k, n, k_pad) logical dims the per-layer JointPacked
+    view needs (scan cannot carry python ints).
+    """
+    arrays: Dict[str, Dict[str, jnp.ndarray]]
+    static: Dict[str, Tuple[int, int, int]]
+    interpret: Optional[bool] = None
+
+    def dense_fn(self, slices):
+        """Build the dense_fn(w, x, name) hook from one layer's slices
+        (the per-iteration xs the scan body receives)."""
+        from repro.kernels import ops
+
+        def mm(w, x, name):
+            t = None if slices is None else slices.get(name)
+            if t is None:
+                return x @ w
+            k, n, k_pad = self.static[name]
+            packed = ops.JointPacked(t["w_blocks"], t["idx"], t["scales"],
+                                     t["nblocks"], k, n, k_pad)
+            return ops.joint_dense(x, packed,
+                                   interpret=self.interpret).astype(x.dtype)
+        return mm
+
+
+def _stacked_projections(params, cfg: ModelConfig):
+    """name -> stacked (L, K, N) weight for the families whose serving
+    forwards are a single layer scan (cfg.supports_stacked_tables — the
+    shared predicate the forward/decode guards also use)."""
+    if not cfg.supports_stacked_tables or "blocks" not in params:
+        return None
+    if cfg.family == "ssm":
+        b = params["blocks"]["ssm"]
+        return {"in_proj": b["in_proj"], "out_proj": b["out_proj"]}
+    out = {k: params["blocks"]["attn"][k] for k in ("wq", "wk", "wv", "wo")}
+    out.update(params["blocks"]["mlp"])
+    return out
+
+
+def build_stacked_tables(params, cfg: ModelConfig,
+                         mode: Optional[str] = None,
+                         value_sparsity: Optional[float] = None,
+                         bk: Optional[int] = None, bn: Optional[int] = None,
+                         interpret: Optional[bool] = None,
+                         ) -> Optional[StackedKernelTables]:
+    """Pack every eligible stacked projection of `params` for serving.
+
+    mode "joint" packs at cfg.dbpim_value_sparsity (column-balanced tile
+    pruning + INT8/FTA payload: (1 - vs) * 0.5 of dense bf16 weight
+    traffic); "bit" packs the same layout at zero value sparsity (0.5x
+    traffic). "dense" and "value" return None — the forwards fall back to
+    plain matmuls (value-level-only serving needs an fp payload the joint
+    layout does not carry; ROADMAP item).
+
+    Returns None (dense serving) for unsupported families. bk/bn default
+    to the kernel tile, clamped down to the padded projection dims so
+    reduced smoke configs (d_model < 128) do not pack pure padding.
+    """
+    from repro.kernels import ops
+
+    mode = mode or (cfg.dbpim_mode if cfg.dbpim else "dense")
+    if mode not in KERNEL_MODES:
+        raise ValueError(f"mode {mode!r} not in {KERNEL_MODES}")
+    if mode in ("dense", "value"):
+        return None
+    vs = value_sparsity if value_sparsity is not None else \
+        (cfg.dbpim_value_sparsity if mode == "joint" else 0.0)
+    if mode == "bit":
+        vs = 0.0
+    projections = _stacked_projections(params, cfg)
+    if projections is None:
+        return None
+
+    arrays: Dict[str, Dict[str, jnp.ndarray]] = {}
+    static: Dict[str, Tuple[int, int, int]] = {}
+    for name, w in projections.items():
+        w = np.asarray(w, np.float32)
+        _round8 = lambda d: max(8, 8 * (-(-d // 8)))
+        bk_eff = bk if bk is not None else min(ops.BK, _round8(w.shape[1]))
+        bn_eff = bn if bn is not None else min(ops.BN, _round8(w.shape[2]))
+        packed = ops.pack_joint_sparse_stacked(
+            w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff)
+        arrays[name] = {"w_blocks": packed.w_blocks, "idx": packed.idx,
+                       "scales": packed.scales, "nblocks": packed.nblocks}
+        static[name] = (packed.k, packed.n, packed.k_pad)
+    return StackedKernelTables(arrays=arrays, static=static,
+                               interpret=interpret)
+
+
+def strip_packed_projections(params, cfg: ModelConfig):
+    """Replace every stacked-packed projection with a (L, 1, 1) zero
+    placeholder: once the tables serve those matmuls, keeping the dense
+    bf16 copies device-resident alongside them would make joint serving
+    cost ~1.3x dense HBM instead of ~0.3x. The placeholder keeps the
+    param tree structure (scan xs still slice a leading layer axis; the
+    dense_fn hook never reads the weight it intercepts) and falls through
+    every sharding rule to replicated."""
+    projections = _stacked_projections(params, cfg)
+    if projections is None:
+        return params
+    names = set(projections)
+
+    def visit(path, leaf):
+        key = _key(path)
+        if any(key.endswith("/" + n) for n in names):
+            return jnp.zeros((leaf.shape[0], 1, 1), leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def reconstruct_stacked_params(params, tables: StackedKernelTables, cfg):
+    """Dense FTA reference weights: replace each packed projection in
+    `params` with its unpacked (pruned + dequantized) stack, so the SAME
+    plain-matmul forward reproduces what the joint kernels compute — the
+    fp32-tolerance reference the stacked serving path is tested against.
+    """
+    from repro.kernels import ops
+    projections = _stacked_projections(params, cfg)
+    recon = {}
+    for name, w in projections.items():
+        t = tables.arrays[name]
+        k, n, k_pad = tables.static[name]
+        packed = ops.JointPackedStacked(t["w_blocks"], t["idx"],
+                                        t["scales"], t["nblocks"],
+                                        k, n, k_pad)
+        recon[name] = jnp.asarray(
+            ops.unpack_joint_sparse_stacked(packed)).astype(
+                jnp.asarray(w).dtype)
+
+    def visit(path, leaf):
+        key = _key(path)
+        for name, new in recon.items():
+            if key.endswith("/" + name):
+                return new
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
 
 
 # ---------------------------------------------------------------------------
