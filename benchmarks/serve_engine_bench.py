@@ -1,0 +1,183 @@
+"""Engine-level serving benchmark: chunked vs full-forward prefill.
+
+Runs the SAME deterministic workload trace (Poisson arrivals, mixed
+prompt lengths, fixed seed) through serving.ServeEngine twice — once with
+chunked cache-filling prefill (prompt chunks of PREFILL_CHUNK tokens per
+device call) and once with the full-forward baseline (every prompt token
+rides a decode call) — over the stacked joint-sparse path, and emits
+``BENCH_serve_engine.json``:
+
+  * per-request steps-to-first-token (prefill device calls consumed by
+    the prompt) under both policies;
+  * served tokens per device step and MODELED weight bytes per served
+    token (per-call weight bytes from the trip-aware jaxpr walker x call
+    counts — chunked prefill reads the packed weights once per C prompt
+    tokens instead of once per token);
+  * engine tick / TTFT / queue-depth summaries from serving.metrics.
+
+Guards (raise -> CI fails):
+  1. both policies generate IDENTICAL tokens (chunked prefill is
+     bit-identical math, only the step schedule changes);
+  2. every request with prompt_len > PREFILL_CHUNK takes STRICTLY fewer
+     prefill steps chunked than full-forward;
+  3. chunked served tokens/step >= the full-forward baseline
+     (the tinyllama reduced config is the CI-guarded cell).
+
+    PYTHONPATH=src python -m benchmarks.serve_engine_bench [--smoke] \
+        [--out BENCH_serve_engine.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import (build_prefill_chunk_step,
+                                build_slot_decode_step)
+from repro.models import init_cache, init_params
+from repro.runtime.jaxpr_cost import analyze
+from repro.serving import ServeEngine, WorkloadSpec, make_trace
+from repro.sparsity.sparse_linear import (build_stacked_tables,
+                                          strip_packed_projections)
+from .common import emit
+
+ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
+PREFILL_CHUNK = 8
+N_SLOTS = 4
+MAX_LEN = 48
+SPEC = WorkloadSpec(n_requests=6, arrival_rate=1.0, prompt_len=(4, 24),
+                    gen_len=(4, 8), dist="uniform", seed=7)
+
+
+def _per_call_weight_bytes(cfg, mesh, params, tables) -> dict:
+    """Modeled weight bytes one decode call / one prefill-chunk call moves
+    through HBM (trip-aware jaxpr walk; packed kernels charge stored
+    bytes only)."""
+    cache = init_cache(cfg, N_SLOTS, MAX_LEN)
+    cache["pos"] = jnp.zeros((N_SLOTS,), jnp.int32)
+    if "attn" in cache:
+        cache["attn"]["pos"] = jnp.zeros((N_SLOTS,), jnp.int32)
+    decode_fn, _ = build_slot_decode_step(cfg, mesh, stacked_tables=tables)
+    tok1 = jnp.zeros((N_SLOTS, 1), jnp.int32)
+    act = jnp.ones((N_SLOTS,), bool)
+    wb_decode = analyze(decode_fn, params, cache, tok1, act)["weight_bytes"]
+    prefill_fn, _ = build_prefill_chunk_step(cfg, mesh,
+                                             stacked_tables=tables)
+    tokc = jnp.zeros((N_SLOTS, PREFILL_CHUNK), jnp.int32)
+    nv = jnp.full((N_SLOTS,), PREFILL_CHUNK, jnp.int32)
+    wb_prefill = analyze(prefill_fn, params, cache, tokc, nv)["weight_bytes"]
+    return {"decode": float(wb_decode), "prefill_chunk": float(wb_prefill)}
+
+
+def bench_arch(arch: str) -> dict:
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint")
+    mesh = make_test_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    if tables is None:
+        raise RuntimeError(f"{arch}: no stacked joint path — the serving "
+                           "integration this bench measures is missing")
+    params = strip_packed_projections(params, cfg)
+    wb = _per_call_weight_bytes(cfg, mesh, params, tables)
+
+    trace = make_trace(SPEC, cfg.vocab_size)
+    runs = {}
+    for mode in ("chunked", "full"):
+        engine = ServeEngine(cfg, params, mesh=mesh, n_slots=N_SLOTS,
+                             max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                             prefill_mode=mode, stacked_tables=tables)
+        outputs = engine.run(trace)
+        s = engine.metrics.summary()
+        total_wb = (s["decode_calls"] * wb["decode"]
+                    + s["prefill_calls"] * wb["prefill_chunk"])
+        runs[mode] = {
+            "outputs": outputs,
+            "summary": s,
+            "per_request": engine.metrics.per_request(),
+            "weight_bytes_per_served_token":
+                total_wb / max(s["generated_tokens"], 1),
+        }
+
+    # guard 1: identical generations — the schedule changed, the math not
+    if runs["chunked"]["outputs"] != runs["full"]["outputs"]:
+        raise RuntimeError(f"{arch}: chunked and full-forward prefill "
+                           "generated different tokens")
+
+    # guard 2: strict prefill-step reduction for prompts > one chunk
+    chunk_steps = {r["rid"]: r["prefill_steps"]
+                   for r in runs["chunked"]["per_request"]}
+    for r in runs["full"]["per_request"]:
+        if r["prompt_len"] > PREFILL_CHUNK and \
+                chunk_steps[r["rid"]] >= r["prefill_steps"]:
+            raise RuntimeError(
+                f"{arch}: req{r['rid']} (prompt {r['prompt_len']} > chunk "
+                f"{PREFILL_CHUNK}) took {chunk_steps[r['rid']]} chunked "
+                f"prefill steps vs {r['prefill_steps']} full — no "
+                f"steps-to-first-token reduction")
+
+    tps_c = runs["chunked"]["summary"]["tokens_per_step"]
+    tps_f = runs["full"]["summary"]["tokens_per_step"]
+    record = {
+        "arch": cfg.name, "family": cfg.family,
+        "prefill_chunk": PREFILL_CHUNK, "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "workload": {"n_requests": SPEC.n_requests,
+                     "arrival_rate": SPEC.arrival_rate,
+                     "prompt_len": SPEC.prompt_len, "gen_len": SPEC.gen_len,
+                     "dist": SPEC.dist, "seed": SPEC.seed},
+        "per_call_weight_bytes": wb,
+        "chunked": {k: v for k, v in runs["chunked"].items()
+                    if k != "outputs"},
+        "full": {k: v for k, v in runs["full"].items() if k != "outputs"},
+        "tokens_per_step_chunked": tps_c,
+        "tokens_per_step_full": tps_f,
+        "ttft_ticks_mean_chunked":
+            runs["chunked"]["summary"]["ttft_ticks_mean"],
+        "ttft_ticks_mean_full": runs["full"]["summary"]["ttft_ticks_mean"],
+        "pass": tps_c >= tps_f,
+    }
+    return record
+
+
+def run(smoke: bool = False, out: str = "BENCH_serve_engine.json"):
+    archs = ARCHS[:1] if smoke else ARCHS
+    rows, records = [], {}
+    for arch in archs:
+        r = bench_arch(arch)
+        records[r["arch"]] = r
+        rows.append((
+            f"serve_engine.{r['arch']}", 0.0,
+            f"tok/step chunked={r['tokens_per_step_chunked']:.3f} "
+            f"full={r['tokens_per_step_full']:.3f}  "
+            f"ttft_ticks {r['ttft_ticks_mean_chunked']:.1f} vs "
+            f"{r['ttft_ticks_mean_full']:.1f}  wB/token "
+            f"{r['chunked']['weight_bytes_per_served_token']:.0f} vs "
+            f"{r['full']['weight_bytes_per_served_token']:.0f}"))
+    emit(rows)
+    payload = {"smoke": smoke, "archs": records,
+               "pass": all(r["pass"] for r in records.values())}
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[serve_engine_bench] wrote {out}")
+    failures = [a for a, r in records.items() if not r["pass"]]
+    if failures:
+        raise RuntimeError(
+            f"chunked prefill served fewer tokens/step than the "
+            f"full-forward baseline for {failures} — see {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="first arch only — the CI engine-path guard")
+    ap.add_argument("--out", default="BENCH_serve_engine.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)

@@ -28,7 +28,8 @@ def get_config(arch: str, reduced: bool = False,
     kernel path ("dense" | "value" | "bit" | "joint") the serving stack
     packs for: launch.serve builds uniform-MAXB stacked tables
     (sparsity.sparse_linear.build_stacked_tables) and threads them
-    through the scanned layer stacks, so "joint"/"bit" change the
+    through the scanned layer stacks, so "joint"/"bit" (INT8/FTA
+    payload) and "value" (bf16 payload, value level only) change the
     compiled serving HLO end-to-end (dense-attention and SSM families;
     per-layer hooks via build_kernel_tables -> models.layers.make_matmul
     remain for the others)."""

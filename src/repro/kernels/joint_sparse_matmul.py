@@ -73,15 +73,15 @@ def _kernel(idx_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref, *, maxb: int):
                       ).astype(o_ref.dtype)
 
 
-def _cost(M, K, NT, MAXB, bk, bn, x_itemsize, out_itemsize):
+def _cost(M, K, NT, MAXB, bk, bn, x_itemsize, out_itemsize, w_itemsize):
     """Static CostEstimate: work scales with the STORED blocks only."""
     if CostEstimate is None:                      # very old jax
         return None
-    stored = NT * MAXB * bk * bn                  # int8 => 1 B each
+    stored = NT * MAXB * bk * bn
     return CostEstimate(
         flops=2 * M * stored,
         bytes_accessed=(M * K * x_itemsize        # activations
-                        + stored                  # int8 payload
+                        + stored * w_itemsize     # payload (int8/bf16)
                         + NT * MAXB * 4           # index table
                         + NT * bn * 4             # scales
                         + M * NT * bn * out_itemsize),
@@ -121,7 +121,7 @@ def _joint_sparse_matmul(x, w_blocks, idx, scales, *, out_dtype,
     grid = (M // bm, NT, MAXB)
 
     cost = _cost(M, K, NT, MAXB, bk, bn, x.dtype.itemsize,
-                 jnp.dtype(out_dtype).itemsize)
+                 jnp.dtype(out_dtype).itemsize, w_blocks.dtype.itemsize)
     # only pass the kwarg where this jax knows it (CostEstimate is None
     # on versions whose pallas_call has no cost_estimate parameter)
     cost_kw = {} if cost is None else {"cost_estimate": cost}

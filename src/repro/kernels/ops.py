@@ -181,11 +181,17 @@ def _tile_alive(m: np.ndarray, bk: int, bn: int) -> np.ndarray:
     return mp.reshape(kt, bk, nt, bn).sum(axis=(1, 3)) > 0
 
 
-def _quantize_and_compact(w, m, bk, bn, fta_project, maxb=None):
-    """Pad -> INT8/FTA quantize -> compact one 2D layer. Returns numpy
+def _quantize_and_compact(w, m, bk, bn, fta_project, maxb=None,
+                          payload: str = "int8"):
+    """Pad -> quantize -> compact one 2D layer. Returns numpy
     (w_blocks, idx, nblocks, scales, Kp, Np). maxb forces the slot count
     (stacked packs share one MAXB across layers); None uses this layer's
-    own survivor maximum."""
+    own survivor maximum.
+
+    payload "int8" is the joint/bit-level artifact (INT8 on the
+    per-filter FTA scale grid); "bf16" keeps the surviving weights as
+    raw bf16 with unit scales — the VALUE-ONLY serving layout, same
+    compaction/index structure, no bit-level compression."""
     alive = _tile_alive(m, bk, bn)                              # (kt, nt)
     K, N = w.shape
     kp, npad = (-K) % bk, (-N) % bn
@@ -193,14 +199,22 @@ def _quantize_and_compact(w, m, bk, bn, fta_project, maxb=None):
     m = np.pad(m, ((0, kp), (0, npad)))
     Kp, Np = w.shape
 
-    q, scales = quantize_int8_fta(w, m, fta_project=fta_project)
-    q = q.astype(np.int8)
+    if payload == "int8":
+        q, scales = quantize_int8_fta(w, m, fta_project=fta_project)
+        q = q.astype(np.int8)
+        pay_dtype = np.int8
+    elif payload == "bf16":
+        q = np.asarray(jnp.asarray(w * m, jnp.bfloat16))
+        scales = np.ones((1, Np), np.float32)
+        pay_dtype = q.dtype
+    else:
+        raise ValueError(f"payload {payload!r} not in ('int8', 'bf16')")
 
     kt, nt = Kp // bk, Np // bn
     if maxb is None:
         maxb = max(int(alive.sum(axis=0).max()), 1)
     tiles = q.reshape(kt, bk, nt, bn)
-    w_blocks = np.zeros((nt, maxb, bk, bn), np.int8)
+    w_blocks = np.zeros((nt, maxb, bk, bn), pay_dtype)
     idx = np.zeros((nt, maxb), np.int32)
     nblocks = np.zeros((nt,), np.int32)
     for n_t in range(nt):
@@ -267,6 +281,7 @@ class JointPackedStacked(NamedTuple):
 def pack_joint_sparse_stacked(w_stack, masks=None, *, bk: int = BK,
                               bn: int = BN, value_sparsity: float = None,
                               fta_project: bool = True,
+                              payload: str = "int8",
                               ) -> JointPackedStacked:
     """Stack-uniform joint compilation of (L, K, N) layer weights.
 
@@ -277,6 +292,13 @@ def pack_joint_sparse_stacked(w_stack, masks=None, *, bk: int = BK,
     quantization -> compaction into the shared-MAXB layout. With explicit
     ragged ``masks`` (L, K, N), MAXB is the max survivor count over the
     whole stack and short layers pad with zero-payload slots.
+
+    payload "bf16" skips the bit level: surviving blocks carry the raw
+    bf16 weights with unit scales — the value-ONLY serving layout
+    (weight traffic (1 - vs) of dense bf16 instead of (1 - vs) * 0.5).
+    The kernel is payload-dtype-agnostic (it dequantizes whatever the
+    blocks hold to the activation dtype), so both layouts serve through
+    the same ``joint_dense`` path.
     """
     w_stack = np.asarray(w_stack, np.float32)
     if w_stack.ndim != 3 or not w_stack.shape[0]:
@@ -296,7 +318,8 @@ def pack_joint_sparse_stacked(w_stack, masks=None, *, bk: int = BK,
     wbs, idxs, nbs, scs = [], [], [], []
     for l in range(L):
         wb, idx, nb, sc, Kp, _ = _quantize_and_compact(
-            w_stack[l], ms[l], bk, bn, fta_project, maxb=maxb)
+            w_stack[l], ms[l], bk, bn, fta_project, maxb=maxb,
+            payload=payload)
         wbs.append(wb)
         idxs.append(idx)
         nbs.append(nb)
@@ -321,8 +344,10 @@ def unpack_joint_sparse_stacked(packed: JointPackedStacked) -> np.ndarray:
 
 
 def unpack_joint_sparse(packed: JointPacked) -> np.ndarray:
-    """Invert pack_joint_sparse -> dense fp32 (K, N) == q * mask * scale."""
-    wb = np.asarray(packed.w_blocks, np.int32)
+    """Invert pack_joint_sparse -> dense fp32 (K, N) == q * mask * scale.
+    Payload-dtype-agnostic: int8 (joint/bit) and bf16 (value-only) blocks
+    both scatter exactly into f32."""
+    wb = np.asarray(packed.w_blocks).astype(np.float32)
     idx = np.asarray(packed.idx)
     nb = np.asarray(packed.nblocks)
     nt, _, bk, bn = wb.shape

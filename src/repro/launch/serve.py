@@ -1,58 +1,43 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Serving CLI — a thin shell over serving.engine.ServeEngine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --reduced --batch 4 --max-len 64 --requests 8
+        --reduced --dbpim-mode joint --prefill-chunk 16
 
-A static decode batch of `batch` slots runs lock-step single-token steps
-(the TPU-efficient regime); finished slots (EOS or length budget) are
-refilled from the request queue — continuous batching with a fixed-shape
-program, no re-compilation per request.
+The engine runs an admission queue over a static batch of ``--batch``
+cache slots (QUEUED -> PREFILLING -> DECODING -> DONE), with chunked
+cache-filling prefill interleaved between decode steps: a new request's
+prompt advances ``--prefill-chunk`` tokens per device call while
+in-flight requests keep emitting a token every tick. All steps are
+fixed-shape and compiled once — no recompilation per request.
 
 ``--dbpim-mode joint`` packs every layer's projections into the
 uniform-MAXB joint-sparse stacked layout once at startup and threads
-them through the decode scan — the whole network serves off the DB-PIM
-kernel ((1 - value_sparsity) * 0.5 of dense bf16 weight traffic).
+them through BOTH the decode scan and the prefill chunks — the whole
+network serves off the DB-PIM kernel ((1 - value_sparsity) * 0.5 of
+dense bf16 weight traffic). ``--dbpim-mode value`` serves the bf16-
+payload variant of the same layout ((1 - vs), value level only).
+
+Load is a deterministic trace (serving.workload): Poisson arrivals at
+``--arrival-rate`` requests/tick, prompt lengths from ``--prompt-len LO
+HI`` under ``--dist``, fixed ``--seed`` — no wall-clock in the trace.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.mesh import make_test_mesh
-from repro.launch.steps import build_serve_step
-from repro.models import init_cache, init_params
+from repro.models import init_params
 from repro.models.transformer import encode
-from repro.runtime import sharding as shr
+from repro.serving import ServeEngine, WorkloadSpec, make_trace
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--dbpim-mode", default=None,
-                    choices=["dense", "value", "bit", "joint"],
-                    help="serve through the DB-PIM kernel path (joint = "
-                         "value x bit sparse, the paper's headline config)")
-    ap.add_argument("--value-sparsity", type=float, default=None,
-                    help="tile-granular value sparsity for --dbpim-mode "
-                         "joint (default: cfg.dbpim_value_sparsity)")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch, reduced=args.reduced,
-                     dbpim_mode=args.dbpim_mode)
-    mesh = make_test_mesh()
-    rng = np.random.default_rng(args.seed)
+def build_engine_and_trace(args, cfg):
+    """Shared by the CLI and benchmarks: engine + trace from parsed args."""
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
     stacked_tables = None
@@ -62,7 +47,7 @@ def main(argv=None):
         stacked_tables = build_stacked_tables(
             params, cfg, value_sparsity=args.value_sparsity)
         if stacked_tables is None:
-            print(f"[serve] {args.arch}: no stacked joint path for this "
+            print(f"[serve] {cfg.name}: no stacked path for this "
                   f"family/mode; serving dense")
         else:
             # the packed tables now serve these matmuls — drop the dense
@@ -78,55 +63,76 @@ def main(argv=None):
 
     enc_out = None
     if cfg.is_encdec:
+        rng = np.random.default_rng(args.seed)
         frames = jnp.asarray(rng.normal(
             0, 1, (args.batch, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
         enc_out = encode(params, frames, cfg)
 
-    with mesh:
-        cache = init_cache(cfg, args.batch, args.max_len, enc_out=enc_out)
-        step_fn, shard_fn = build_serve_step(cfg, mesh,
-                                             stacked_tables=stacked_tables)
-        token0 = jnp.zeros((args.batch, 1), jnp.int32)
-        pspec, cspec, tspec = shard_fn(params, cache, token0)
-        jitted = jax.jit(step_fn,
-                         in_shardings=(shr.named(pspec, mesh),
-                                       shr.named(cspec, mesh),
-                                       shr.named(tspec, mesh)),
-                         donate_argnums=(1,))
+    engine = ServeEngine(cfg, params, n_slots=args.batch,
+                         max_len=args.max_len,
+                         prefill_chunk=args.prefill_chunk,
+                         prefill_mode=args.prefill_mode,
+                         stacked_tables=stacked_tables, enc_out=enc_out)
+    spec = WorkloadSpec(n_requests=args.requests,
+                        arrival_rate=args.arrival_rate,
+                        prompt_len=tuple(args.prompt_len),
+                        gen_len=(args.gen_len, args.gen_len),
+                        dist=args.dist, seed=args.seed)
+    return engine, make_trace(spec, cfg.vocab_size)
 
-        # continuous batching over a fixed-slot decode batch
-        pending = list(rng.integers(1, cfg.vocab_size,
-                                    (args.requests,)).tolist())
-        slots = [None] * args.batch          # (request_id, tokens_so_far)
-        outputs = {}
-        next_id = 0
-        tokens = np.zeros((args.batch, 1), np.int32)
-        t0 = time.time()
-        steps = 0
-        while len(outputs) < args.requests:
-            for s in range(args.batch):
-                if slots[s] is None and pending:
-                    prompt = pending.pop(0)
-                    slots[s] = (next_id, [int(prompt)])
-                    tokens[s, 0] = prompt
-                    next_id += 1
-            logits, cache = jitted(params, cache,
-                                   jnp.asarray(tokens))
-            steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-            for s in range(args.batch):
-                if slots[s] is None:
-                    continue
-                rid, toks = slots[s]
-                toks.append(int(nxt[s]))
-                tokens[s, 0] = nxt[s]
-                if len(toks) >= args.gen_len:
-                    outputs[rid] = toks
-                    slots[s] = None
-        dt = time.time() - t0
-    tput = args.requests * args.gen_len / dt
-    print(f"[serve] {args.requests} requests x {args.gen_len} tokens in "
-          f"{dt:.2f}s ({tput:.1f} tok/s, {steps} decode steps)")
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (static decode batch)")
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunked-prefill device call")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "full"],
+                    help="'full' = token-by-token baseline prefill")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=[4, 24],
+                    metavar=("LO", "HI"))
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="Poisson arrivals per engine tick (0 = all at t0)")
+    ap.add_argument("--dist", default="uniform",
+                    choices=["uniform", "bimodal", "fixed"])
+    ap.add_argument("--dbpim-mode", default=None,
+                    choices=["dense", "value", "bit", "joint"],
+                    help="serve through the DB-PIM kernel path (joint = "
+                         "value x bit sparse, the paper's headline config)")
+    ap.add_argument("--value-sparsity", type=float, default=None,
+                    help="tile-granular value sparsity for --dbpim-mode "
+                         "joint/value (default: cfg.dbpim_value_sparsity)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced,
+                     dbpim_mode=args.dbpim_mode)
+    engine, trace = build_engine_and_trace(args, cfg)
+    if engine.prefill_mode != args.prefill_mode:
+        print(f"[serve] {cfg.name}: chunked prefill unsupported for this "
+              f"family; falling back to stepwise (full) prefill")
+
+    outputs = engine.run(trace)
+    s = engine.metrics.summary()
+    print(f"[serve] {s['n_completed']}/{s['n_requests']} requests, "
+          f"{s['generated_tokens']} tokens in {s['engine_ticks']} ticks / "
+          f"{s['device_calls']} device calls "
+          f"({s['decode_calls']} decode + {s['prefill_calls']} prefill)")
+    ttft = (f"mean={s['ttft_ticks_mean']:.1f} p95={s['ttft_ticks_p95']}"
+            if s["ttft_ticks_mean"] is not None else "n/a")
+    print(f"[serve] tokens/step={s['tokens_per_step']:.3f}  "
+          f"ttft_ticks {ttft}  queue_depth "
+          f"mean={s['queue_depth_mean']:.2f} max={s['queue_depth_max']}")
+    if s["tokens_per_sec"]:
+        print(f"[serve] wall {s['wall_s']:.2f}s  "
+              f"{s['tokens_per_sec']:.1f} tok/s  "
+              f"{s['per_token_latency_ms']:.2f} ms/token")
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:8]}...")
     return outputs

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models import decode_step, loss_fn
+from repro.models import decode_chunk, decode_step, loss_fn, merge_slots
 from repro.models.config import ModelConfig
 from repro.optim import AdamWState, adamw_init, adamw_update, \
     cosine_with_warmup
@@ -117,8 +117,9 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh,
     build_stacked_tables(params, cfg)): the uniform-MAXB joint-sparse
     weight packs ride the decode-step layer scan, so every projection of
     every layer runs the DB-PIM Pallas kernel — the compiled serving HLO
-    changes (weight traffic (1 - vs) * 0.5 of dense bf16). Mutually
-    exclusive with int8_weights (the tables already carry INT8 payloads).
+    changes (weight traffic (1 - vs) * 0.5 of dense bf16 for joint;
+    (1 - vs) for the bf16-payload value tables). Mutually exclusive with
+    int8_weights (the tables already carry their own payload).
     """
     if int8_weights and stacked_tables is not None:
         raise ValueError("int8_weights and stacked_tables are mutually "
@@ -133,21 +134,73 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh,
                            tables=stacked_tables)
 
     def shardings(params, cache, token):
-        # Serving keeps weights RESIDENT (TP-sharded, replicated over DP):
-        # FSDP would re-all-gather the full model every decoded token.
-        # Only models whose TP shard exceeds the HBM budget (arctic-class)
-        # keep FSDP and pay the gathers.
-        pbytes = sum(
-            leaf.size * getattr(leaf.dtype, "itemsize", 2)
-            for leaf in jax.tree_util.tree_leaves(params))
-        tp = mesh.shape.get("model", 1)
-        fsdp = (pbytes / tp) > 12e9
-        pspec = shr.param_specs(params, mesh, fsdp=fsdp)
+        pspec = _serving_param_specs(params, mesh)
         cspec = shr.cache_specs(cache, cfg, mesh)
         tspec = shr.batch_specs({"token": token}, mesh)["token"]
         return pspec, cspec, tspec
 
     return serve_step, shardings
+
+
+def _serving_param_specs(params, mesh: Mesh):
+    # Serving keeps weights RESIDENT (TP-sharded, replicated over DP):
+    # FSDP would re-all-gather the full model every decoded token.
+    # Only models whose TP shard exceeds the HBM budget (arctic-class)
+    # keep FSDP and pay the gathers.
+    pbytes = sum(
+        leaf.size * getattr(leaf.dtype, "itemsize", 2)
+        for leaf in jax.tree_util.tree_leaves(params))
+    tp = mesh.shape.get("model", 1)
+    fsdp = (pbytes / tp) > 12e9
+    return shr.param_specs(params, mesh, fsdp=fsdp)
+
+
+def build_slot_decode_step(cfg: ModelConfig, mesh: Mesh,
+                           stacked_tables=None):
+    """Decode step for the serving engine: one fixed-shape (B, 1) token
+    step plus a per-slot ``active`` mask. Inactive slots (free, draining,
+    or mid-prefill while their neighbors decode) compute alongside the
+    batch but their cache writes and position advances are discarded
+    (models.decode.merge_slots) — continuous batching with ZERO
+    per-request recompilation. Positions come from cache["pos"], a (B,)
+    vector of per-slot depths."""
+
+    def slot_decode_step(params, cache, token, active):
+        logits, new_cache = decode_step(params, cache, token, cfg,
+                                        tables=stacked_tables)
+        return logits, merge_slots(new_cache, cache, active, cfg)
+
+    def shardings(params, cache, token, active):
+        pspec = _serving_param_specs(params, mesh)
+        cspec = shr.cache_specs(cache, cfg, mesh)
+        bspec = shr.batch_specs({"token": token, "active": active}, mesh)
+        return pspec, cspec, bspec["token"], bspec["active"]
+
+    return slot_decode_step, shardings
+
+
+def build_prefill_chunk_step(cfg: ModelConfig, mesh: Mesh,
+                             stacked_tables=None):
+    """Chunked cache-filling prefill step: C prompt tokens per slot in ONE
+    fixed-shape device call (models.decode.decode_chunk), so
+    time-to-first-token is ceil(P/C) steps instead of P. n_valid (B,)
+    carries each slot's real token count this chunk (0 = slot not
+    prefilling; its cache is untouched). stacked_tables threads the
+    uniform-MAXB joint-sparse packs through the chunk's layer scan —
+    prompt chunks run the DB-PIM kernel exactly like decode steps do."""
+
+    def prefill_chunk_step(params, cache, tokens, n_valid):
+        return decode_chunk(params, cache, tokens, n_valid, cfg,
+                            tables=stacked_tables)
+
+    def shardings(params, cache, tokens, n_valid):
+        pspec = _serving_param_specs(params, mesh)
+        cspec = shr.cache_specs(cache, cfg, mesh)
+        bspec = shr.batch_specs({"tokens": tokens, "n_valid": n_valid},
+                                mesh)
+        return pspec, cspec, bspec["tokens"], bspec["n_valid"]
+
+    return prefill_chunk_step, shardings
 
 
 def build_prefill_step(cfg: ModelConfig, mesh: Mesh):

@@ -44,12 +44,22 @@ def _repeat_kv(k, n_rep):
 
 
 def _sdpa(q, k, v, mask, dtype):
-    """q (B,Sq,H,hd), k/v (B,Skv,H,hd), mask broadcast (B,1,Sq,Skv)."""
+    """q (B,Sq,H,hd), k/v (B,Skv,H,hd), mask broadcast (B,1,Sq,Skv).
+
+    The probs @ v contraction is written as a plain batched matmul
+    (``bhqk,bhkd->bhqd`` on pre-transposed v) rather than the fused
+    ``bhqk,bkhd->bqhd`` form: the fused output transpose makes XLA pick
+    Sq-dependent loop orders, so a 1-token decode and a C-token prefill
+    chunk would disagree in the last float bit. The batched-matmul form
+    is row-stable across Sq — what lets chunked prefill reproduce
+    sequential decode bit-for-bit.
+    """
     scale = q.shape[-1] ** -0.5
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, jnp.moveaxis(v, 2, 1))
+    return jnp.moveaxis(out, 1, 2)
 
 
 CHUNKED_ATTN_THRESHOLD = 16384
@@ -176,16 +186,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
             "pos": jnp.zeros((), jnp.int32)}
 
 
+def _per_slot_pos(pos, B: int):
+    """Normalize a cache position to per-slot (B,) int32. Serving keeps a
+    scalar position for lock-step batches and a vector when slots hold
+    requests at different depths (the serving engine's continuous-batching
+    regime); both shapes flow through the same vectorized math."""
+    return jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)),
+                            (B,))
+
+
 def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
                      dense_fn=None):
     """Single-token decode against one layer's cache slice.
 
     x (B, 1, D); cache_k/v (B, A, Hkv, hd) with A = alloc len; pos = number
-    of tokens already in the cache. Returns (out, new_k, new_v).
+    of tokens already in the cache — a scalar (lock-step batch) or a (B,)
+    vector (per-slot depths). Returns (out, new_k, new_v).
     """
     mm = dense_fn or (lambda w, v, name: v @ w)
     B = x.shape[0]
     A = cache_k.shape[1]
+    posv = _per_slot_pos(pos, B)                                   # (B,)
     q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
     k = _split_heads(mm(p["wk"], x, "wk"), cfg.n_kv_heads, cfg.hd)
     v = _split_heads(mm(p["wv"], x, "wv"), cfg.n_kv_heads, cfg.hd)
@@ -193,20 +214,70 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
         q = rms_head_norm(p["q_norm"], q)
         k = rms_head_norm(p["k_norm"], k)
     if cfg.rope_pct > 0:
-        posv = jnp.full((B, 1), pos, jnp.int32)
-        cos, sin = rope_frequencies(cfg, posv)
+        cos, sin = rope_frequencies(cfg, posv[:, None])
         q = apply_rope(q, cos, sin, cfg)
         k = apply_rope(k, cos, sin, cfg)
-    slot = jnp.mod(pos, A) if cfg.window else jnp.minimum(pos, A - 1)
-    new_k = cache_k.at[:, slot].set(k[:, 0])
-    new_v = cache_v.at[:, slot].set(v[:, 0])
+    slot = jnp.mod(posv, A) if cfg.window else jnp.minimum(posv, A - 1)
+    rows = jnp.arange(B)
+    new_k = cache_k.at[rows, slot].set(k[:, 0])
+    new_v = cache_v.at[rows, slot].set(v[:, 0])
     kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
     vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
-    kpos = jnp.arange(A)
+    kpos = jnp.arange(A)[None, :]                                  # (1, A)
     if cfg.window:
-        valid = (kpos <= slot) | (pos >= A)    # ring buffer: all valid once full
+        # ring buffer: all valid once full
+        valid = (kpos <= slot[:, None]) | (posv[:, None] >= A)
     else:
-        valid = kpos <= pos
-    mask = valid[None, None, None, :]
+        valid = kpos <= posv[:, None]
+    mask = valid[:, None, None, :]                                 # (B,1,1,A)
     out = _sdpa(q, kk, vv, mask, x.dtype)
     return mm(p["wo"], out.reshape(B, 1, cfg.q_dim), "wo"), new_k, new_v
+
+
+def prefill_attention(p, x, cache_k, cache_v, pos, n_valid,
+                      cfg: ModelConfig, dense_fn=None):
+    """Chunked cache-filling attention: C prompt tokens in one step.
+
+    x (B, C, D); cache_k/v (B, A, Hkv, hd); pos (B,) tokens already in the
+    cache per slot; n_valid (B,) in [0, C] real tokens in this chunk (the
+    tail chunk of a prompt is ragged; slots not prefilling pass 0).
+    Writes the valid tokens' k/v at positions pos..pos+n_valid-1 (invalid
+    columns scatter out of range and are DROPPED, so inactive slots' cache
+    slices are untouched) and attends each query to every cached position
+    <= its own — bit-identical per token to running `decode_attention`
+    n_valid times, but one MXU-shaped step. Returns (out, new_k, new_v).
+
+    Requires cfg.window == 0: a sliding-window ring buffer overwrites
+    slots within the chunk, which only a sequential walk reproduces.
+    """
+    if cfg.window:
+        raise ValueError("chunked prefill does not support sliding-window "
+                         "ring caches; use stepwise (full-forward) prefill")
+    mm = dense_fn or (lambda w, v, name: v @ w)
+    B, C, _ = x.shape
+    A = cache_k.shape[1]
+    posv = _per_slot_pos(pos, B)                                   # (B,)
+    qpos = posv[:, None] + jnp.arange(C)[None, :]                  # (B, C)
+    q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
+    k = _split_heads(mm(p["wk"], x, "wk"), cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(mm(p["wv"], x, "wv"), cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope_pct > 0:
+        cos, sin = rope_frequencies(cfg, qpos)
+        q = apply_rope(q, cos, sin, cfg)
+        k = apply_rope(k, cos, sin, cfg)
+    # scatter the valid chunk tokens into the cache; invalid columns get
+    # row index A (out of range) and are dropped by the scatter
+    tok_valid = jnp.arange(C)[None, :] < n_valid[:, None]          # (B, C)
+    write_rows = jnp.where(tok_valid, jnp.minimum(qpos, A - 1), A)
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    new_k = cache_k.at[b_idx, write_rows].set(k, mode="drop")
+    new_v = cache_v.at[b_idx, write_rows].set(v, mode="drop")
+    kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
+    vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
+    kpos = jnp.arange(A)[None, None, :]                            # (1,1,A)
+    mask = kpos <= qpos[:, :, None]                                # (B,C,A)
+    out = _sdpa(q, kk, vv, mask[:, None], x.dtype)
+    return mm(p["wo"], out.reshape(B, C, cfg.q_dim), "wo"), new_k, new_v

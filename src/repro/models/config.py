@@ -106,6 +106,19 @@ class ModelConfig:
         return bool(self.n_heads) and not self.n_experts \
             and not self.is_encdec and self.family != "hybrid"
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Families whose caches a multi-token chunk can fill with results
+        bit-identical to sequential decode steps: the homogeneous
+        dense-attention and SSM scans. Sliding-window ring buffers
+        overwrite slots within a chunk; MoE capacity dispatch makes the
+        token pool competing for expert slots part of the math; hybrid /
+        enc-dec mix sublayer kinds. Those fall back to stepwise prefill
+        (serving.prefill)."""
+        if self.family == "ssm":
+            return True
+        return self.supports_stacked_tables and self.window == 0
+
     def scaled(self, **kw) -> "ModelConfig":
         return replace(self, **kw)
 

@@ -70,13 +70,16 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
     pos = cache["pos"]
     x = embed_tokens(params["embed"], token, cfg)
     if cfg.rope_pct == 0:
-        # sinusoidal position embedding at position `pos`
+        # sinusoidal position embedding at position `pos` (scalar, or (B,)
+        # when slots decode at different depths)
+        B = token.shape[0]
         d = cfg.d_model
+        posv = attn_mod._per_slot_pos(pos, B).astype(jnp.float32)
         dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
-        ang = pos.astype(jnp.float32) / (10000.0 ** (dim / d))
-        pe = jnp.zeros((1, d), jnp.float32)
+        ang = posv[:, None] / (10000.0 ** (dim / d))               # (B, d/2)
+        pe = jnp.zeros((B, d), jnp.float32)
         pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-        x = x + pe[None].astype(x.dtype)
+        x = x + pe[:, None].astype(x.dtype)
 
     new_cache = dict(cache)
 
@@ -165,11 +168,148 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
     return logits_from_hidden(params["embed"], x, cfg), new_cache
 
 
+def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
+                 tables=None):
+    """Chunked cache-filling prefill: C prompt tokens per slot, one step.
+
+    tokens (B, C) int32; n_valid (B,) int32 in [0, C] — the number of real
+    prompt tokens per slot this chunk (ragged tail chunks and idle slots
+    pass fewer/0; their cache slices are left untouched). cache["pos"] is
+    the per-slot fill depth ((B,) vector, or a scalar broadcast).
+
+    Returns (logits (B, 1, V) of each slot's LAST VALID token — the
+    first-generated-token logits when the chunk completes a prompt — and
+    the cache advanced by n_valid per slot). Per-token math is
+    bit-identical to running `decode_step` n_valid times, but the chunk is
+    one fixed-shape device step: time-to-first-token is ceil(P/C) steps
+    instead of P, and the unembedding runs once per chunk instead of once
+    per prompt token.
+
+    Like decode_step, `tables` threads the uniform-MAXB joint-sparse packs
+    through the layer scan, so prompt chunks run the DB-PIM kernel too.
+    """
+    if not cfg.supports_chunked_prefill:
+        raise ValueError(f"chunked prefill is not supported for {cfg.name} "
+                         f"(windowed/MoE/hybrid/enc-dec); use stepwise "
+                         f"prefill")
+    if tables is not None and not cfg.supports_stacked_tables:
+        raise ValueError(f"stacked kernel tables are not supported for "
+                         f"{cfg.name}")
+    B, C = tokens.shape
+    pos = attn_mod._per_slot_pos(cache["pos"], B)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+
+    def layer_mm(slices):
+        return tables.dense_fn(slices) if tables is not None else None
+
+    txs = tables.arrays if tables is not None else None
+    x = embed_tokens(params["embed"], tokens, cfg)
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        def step(h, inp):
+            p, conv, state, slices = inp
+            hn = apply_norm(p["norm1"], h, cfg)
+            y, new_conv, new_state = ssm_mod.prefill_ssm(
+                p["ssm"], hn, conv, state, n_valid, cfg,
+                dense_fn=layer_mm(slices))
+            return h + y, (new_conv, new_state)
+        x, (convs, states) = jax.lax.scan(
+            step, x, (params["blocks"], cache["ssm"]["conv"],
+                      cache["ssm"]["state"], txs))
+        new_cache["ssm"] = {"conv": convs, "state": states}
+    else:
+        def step(h, inp):
+            p, ck, cv, slices = inp
+            mm = layer_mm(slices)
+            hn = apply_norm(p["norm1"], h, cfg)
+            y, ck, cv = attn_mod.prefill_attention(
+                p["attn"], hn, ck, cv, pos, n_valid, cfg, dense_fn=mm)
+            h = h + y
+            hn2 = apply_norm(p["norm2"], h, cfg)
+            y2 = apply_mlp(p["mlp"], hn2, cfg, dense_fn=mm)
+            return h + y2, (ck, cv)
+        x, (cks, cvs) = jax.lax.scan(
+            step, x, (params["blocks"], cache["attn"]["k"],
+                      cache["attn"]["v"], txs))
+        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + n_valid}
+
+    new_cache["pos"] = pos + n_valid
+    x = apply_norm(params["final_norm"], x, cfg)
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last][:, None]                  # (B, 1, D)
+    return logits_from_hidden(params["embed"], x_last, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache surgery (the serving engine's slot scheduler)
+# ---------------------------------------------------------------------------
+
+def _select_batch(mask, new, old, axis: int):
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def merge_slots(new_cache, old_cache, keep_mask, cfg: ModelConfig):
+    """Per-slot cache select: slots where keep_mask (B,) is True take the
+    updated cache, the rest keep their previous contents and position.
+
+    This is what lets ONE fixed-shape decode step serve a batch where
+    only some slots are actively decoding (others are mid-prefill, free,
+    or draining): the step computes updates for every slot, and the merge
+    discards the writes of inactive ones. Positions come out as (B,)
+    vectors regardless of input shape. Encoder output (enc-dec) is shared
+    across the batch and passes through unchanged."""
+    B = keep_mask.shape[0]
+
+    def sel_pos(new, old):
+        return jnp.where(keep_mask, attn_mod._per_slot_pos(new, B),
+                         attn_mod._per_slot_pos(old, B))
+
+    out = dict(new_cache)
+    out["pos"] = sel_pos(new_cache["pos"], old_cache["pos"])
+    if "attn" in new_cache:
+        a = dict(new_cache["attn"])
+        axis = 1                       # (L, B, A, Hkv, hd) / hybrid periods
+        for kname in ("k", "v"):
+            a[kname] = _select_batch(keep_mask, new_cache["attn"][kname],
+                                     old_cache["attn"][kname], axis)
+        if "pos" in a:
+            a["pos"] = sel_pos(new_cache["attn"]["pos"],
+                               old_cache["attn"]["pos"])
+        out["attn"] = a
+    if "ssm" in new_cache:
+        axis = 2 if cfg.family == "hybrid" else 1
+        out["ssm"] = jax.tree_util.tree_map(
+            lambda n, o: _select_batch(keep_mask, n, o, axis),
+            new_cache["ssm"], old_cache["ssm"])
+    return out
+
+
+def reset_slots(cache, slot_mask, cfg: ModelConfig):
+    """Zero the KV/SSM cache slices and position of the slots where
+    slot_mask (B,) is True — the admission step before a freed slot takes
+    a new request. Without this, a refilled slot's attention would still
+    mask correctly (pos restarts at 0) but SSM states and ring buffers
+    carry the PREVIOUS request's activations into the new one. Encoder
+    output (enc-dec) is shared and not per-request; callers that rotate
+    enc-dec requests must swap it themselves."""
+    zeroed = {}
+    for key, val in cache.items():
+        if key == "enc_out":
+            zeroed[key] = val
+        else:
+            zeroed[key] = jax.tree_util.tree_map(jnp.zeros_like, val)
+    return merge_slots(cache, zeroed, ~slot_mask, cfg)
+
+
 def prefill(params, tokens, cfg: ModelConfig,
             frames: Optional[jnp.ndarray] = None, tables=None):
     """Prefill returns last-position logits. (The dry-run lowers the full
-    forward; serving fills the cache by running decode positions — a
-    chunked cache-filling prefill is a TODO noted in DESIGN.md.)"""
+    forward; serving fills caches through the engine — chunked
+    `decode_chunk` steps, or stepwise decode for families without chunked
+    support. See serving.prefill.)"""
     from .transformer import forward
     enc_out = encode(params, frames, cfg) if cfg.is_encdec else None
     return forward(params, tokens, cfg, enc_out=enc_out, last_only=True,

@@ -172,3 +172,35 @@ def decode_ssm(p, x, conv_state, ssm_state, cfg: ModelConfig,
     out = mm(p["out_proj"], _gated_norm(y, z[:, None, :], p["norm_scale"]),
              "out_proj")
     return out, window[:, 1:], new_state
+
+
+def prefill_ssm(p, x, conv_state, ssm_state, n_valid, cfg: ModelConfig,
+                dense_fn=None):
+    """Chunked cache-filling prefill: C prompt tokens through the exact
+    decode recurrence in one step.
+
+    x (B, C, D); conv_state (B, W-1, Ch); ssm_state (B, nh, P, N);
+    n_valid (B,) in [0, C] real tokens per slot. The chunk runs an inner
+    `lax.scan` of `decode_ssm` token steps — bit-identical state/conv
+    trajectories to n_valid sequential decode calls (the chunked-matmul
+    training form reorders the f32 accumulation) — with per-slot validity
+    gating so ragged tail chunks and idle slots leave their caches
+    untouched. Returns (y (B, C, D), new_conv, new_state).
+    """
+    C = x.shape[1]
+
+    def step(carry, inp):
+        conv, state = carry
+        xt, t = inp                                    # (B, 1, D), scalar
+        y, new_conv, new_state = decode_ssm(p, xt, conv, state, cfg,
+                                            dense_fn=dense_fn)
+        keep = (t < n_valid)                           # (B,)
+        conv = jnp.where(keep[:, None, None], new_conv, conv)
+        state = jnp.where(keep[:, None, None, None], new_state, state)
+        return (conv, state), y
+
+    xs = jnp.moveaxis(x[:, :, None, :], 1, 0)          # (C, B, 1, D)
+    (conv, state), ys = jax.lax.scan(
+        step, (conv_state, ssm_state), (xs, jnp.arange(C)))
+    y = jnp.moveaxis(ys[:, :, 0, :], 0, 1)             # (B, C, D)
+    return y, conv, state

@@ -87,7 +87,12 @@ def _is_pallas_weight(aval) -> bool:
         return False
     if kind in ("i", "u"):
         return True
-    return kind == "f" and (len(shape) != 2 or shape[0] == 1)
+    # floating covers bf16 payloads too: ml_dtypes' bfloat16 reports
+    # numpy kind "V" (void), so a kind == "f" check alone would silently
+    # drop the value-only stacked payload from the weight tally
+    is_float = kind == "f" or jax.numpy.issubdtype(aval.dtype,
+                                                   jax.numpy.floating)
+    return is_float and (len(shape) != 2 or shape[0] == 1)
 
 
 def _walk(jaxpr, mult: int, acc: Dict[str, float],

@@ -1,0 +1,6 @@
+"""Request-level serving: engine, chunked prefill, load gen, metrics."""
+
+from .engine import ServeEngine, SlotState  # noqa: F401
+from .metrics import MetricsRecorder  # noqa: F401
+from .prefill import PREFILL_MODES, assemble_chunk  # noqa: F401
+from .workload import Request, WorkloadSpec, make_trace  # noqa: F401

@@ -1,0 +1,301 @@
+"""Request-level serving engine: admission queue + per-slot state machine
++ fixed-shape jitted steps.
+
+The engine owns a static batch of ``n_slots`` cache slots. Each request
+moves through
+
+    QUEUED -> PREFILLING -> DECODING -> DONE
+
+with all scheduling host-side and all math in exactly TWO compiled
+executables (three with slot reset), fixed-shape so NO recompilation ever
+happens per request:
+
+  * decode step   (B, 1) tokens + (B,) active mask
+    (launch.steps.build_slot_decode_step — inactive slots' cache writes
+    are discarded by models.decode.merge_slots);
+  * prefill chunk (B, C) tokens + (B,) n_valid
+    (serving.prefill.build_chunk_step — only in "chunked" mode);
+  * slot reset — zeroes a freed slot's KV/SSM cache slices and position
+    before admission (models.decode.reset_slots), so a refilled slot is
+    indistinguishable from a fresh batch.
+
+One engine TICK = admit -> (prefill chunk, if any slot is prefilling) ->
+(decode step, if any slot is decoding). Prefill and decode are separate
+device calls, so prefilling a newly admitted request NEVER stalls
+in-flight decodes — decoding slots emit a token every tick regardless of
+arrivals. In "full" prefill mode (the baseline), prompt tokens instead
+ride the decode call one at a time.
+
+Per-slot cache positions: cache["pos"] is a (B,) vector — slots hold
+requests at different depths, which is what the vectorized
+decode_attention / decode_chunk paths exist for.
+"""
+
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import build_slot_decode_step
+from repro.models import init_cache, reset_slots
+from repro.runtime import sharding as shr
+from repro.serving.metrics import MetricsRecorder
+from repro.serving.prefill import (PREFILL_MODES, assemble_chunk,
+                                   build_chunk_step)
+from repro.serving.workload import Request
+
+
+class SlotState(enum.Enum):
+    FREE = "free"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+
+
+@dataclass
+class _Slot:
+    state: SlotState = SlotState.FREE
+    rid: Optional[int] = None
+    prompt: Optional[np.ndarray] = None
+    cursor: int = 0                      # prompt tokens already in cache
+    gen_len: int = 0
+    pending_token: int = 0               # next decode input
+
+
+@dataclass
+class SlotInterval:
+    """Audit record: slot s served rid from admit_tick until release_tick
+    (exclusive). Tests verify intervals on one slot never overlap."""
+    slot: int
+    rid: int
+    admit_tick: int
+    release_tick: Optional[int] = None
+
+
+class ServeEngine:
+    """See module docstring. Typical use:
+
+        engine = ServeEngine(cfg, params, n_slots=4, max_len=64,
+                             prefill_chunk=16, stacked_tables=tables)
+        results = engine.run(make_trace(spec, cfg.vocab_size))
+        print(engine.metrics.summary())
+    """
+
+    def __init__(self, cfg, params, *, mesh=None, n_slots: int = 4,
+                 max_len: int = 64, prefill_chunk: int = 16,
+                 prefill_mode: str = "chunked", stacked_tables=None,
+                 enc_out=None, max_ticks: int = 100_000):
+        if prefill_mode not in PREFILL_MODES:
+            raise ValueError(f"prefill_mode {prefill_mode!r} not in "
+                             f"{PREFILL_MODES}")
+        if prefill_mode == "chunked" and not cfg.supports_chunked_prefill:
+            # windowed / MoE / hybrid / enc-dec families: chunk semantics
+            # can't reproduce sequential decode — serve them stepwise
+            prefill_mode = "full"
+        self.cfg = cfg
+        self.mesh = mesh or make_test_mesh()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.prefill_mode = prefill_mode
+        self.max_ticks = max_ticks
+
+        self.params = params
+        with self.mesh:
+            cache = init_cache(cfg, n_slots, max_len, enc_out=enc_out)
+            # per-slot positions from the start (merge_slots vectorizes
+            # them anyway; starting scalar would recompile after tick 0)
+            cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+            if "attn" in cache and "pos" in cache["attn"]:
+                cache["attn"]["pos"] = jnp.zeros((n_slots,), jnp.int32)
+            self.cache = cache
+
+            decode_fn, shard_fn = build_slot_decode_step(
+                cfg, self.mesh, stacked_tables=stacked_tables)
+            tok0 = jnp.zeros((n_slots, 1), jnp.int32)
+            act0 = jnp.zeros((n_slots,), bool)
+            pspec, cspec, tspec, aspec = shard_fn(params, cache, tok0, act0)
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(shr.named(pspec, self.mesh),
+                              shr.named(cspec, self.mesh),
+                              shr.named(tspec, self.mesh),
+                              shr.named(aspec, self.mesh)),
+                donate_argnums=(1,))
+            self._prefill = None
+            if prefill_mode == "chunked":
+                self._prefill = build_chunk_step(
+                    cfg, self.mesh, params, cache, n_slots, prefill_chunk,
+                    stacked_tables=stacked_tables)
+            self._reset = jax.jit(
+                lambda c, m: reset_slots(c, m, cfg), donate_argnums=(0,))
+
+        self.queue: deque = deque()
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.tick_count = 0
+        self.outputs: Dict[int, List[int]] = {}
+        self.first_logits: Dict[int, np.ndarray] = {}
+        self.slot_log: List[SlotInterval] = []
+        self._open_interval: Dict[int, SlotInterval] = {}
+        self.metrics = MetricsRecorder()
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, request: Request):
+        total = request.prompt_len + request.gen_len
+        if total > self.max_len:
+            raise ValueError(
+                f"request {request.rid}: prompt {request.prompt_len} + "
+                f"gen {request.gen_len} exceeds max_len {self.max_len}")
+        self.queue.append(request)
+        self.metrics.on_submit(request.rid, request.prompt_len,
+                               request.gen_len, request.arrival)
+
+    def run(self, requests: List[Request]):
+        """Serve a trace to completion; returns {rid: generated tokens}."""
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            self.submit(r)
+        self.metrics.start()
+        while self.queue or any(s.state is not SlotState.FREE
+                                for s in self.slots):
+            self.tick()
+            if self.tick_count > self.max_ticks:
+                raise RuntimeError(f"engine exceeded max_ticks="
+                                   f"{self.max_ticks}; scheduler stuck?")
+        self.metrics.stop()
+        return self.outputs
+
+    # ------------------------------------------------------------- one tick
+
+    def tick(self):
+        tick = self.tick_count
+        calls = 0
+        self._admit(tick)
+        if self.prefill_mode == "chunked":
+            calls += self._prefill_phase(tick)
+        calls += self._decode_phase(tick)
+        self.metrics.on_tick(
+            tick,
+            queue_depth=len(self.queue),
+            n_prefilling=sum(s.state is SlotState.PREFILLING
+                             for s in self.slots),
+            n_decoding=sum(s.state is SlotState.DECODING
+                           for s in self.slots),
+            device_calls=calls)
+        self.tick_count += 1
+
+    # -------------------------------------------------------------- phases
+
+    def _admit(self, tick: int):
+        """QUEUED -> PREFILLING: pop arrived requests into free slots and
+        ZERO the slots' stale cache slices (the previous occupant's
+        KV/SSM state must not leak into the new request)."""
+        mask = np.zeros((self.n_slots,), bool)
+        for s, slot in enumerate(self.slots):
+            if slot.state is not SlotState.FREE or not self.queue:
+                continue
+            if self.queue[0].arrival > tick:
+                break                     # trace is arrival-sorted
+            req = self.queue.popleft()
+            slot.state = SlotState.PREFILLING
+            slot.rid = req.rid
+            slot.prompt = np.asarray(req.prompt, np.int32)
+            slot.cursor = 0
+            slot.gen_len = req.gen_len
+            slot.pending_token = 0
+            mask[s] = True
+            self.outputs[req.rid] = []
+            self.metrics.on_admit(req.rid, tick)
+            iv = SlotInterval(slot=s, rid=req.rid, admit_tick=tick)
+            self.slot_log.append(iv)
+            self._open_interval[s] = iv
+        if mask.any():
+            self.cache = self._reset(self.cache, jnp.asarray(mask))
+
+    def _prefill_phase(self, tick: int) -> int:
+        prefilling = {s: slot.prompt for s, slot in enumerate(self.slots)
+                      if slot.state is SlotState.PREFILLING}
+        if not prefilling:
+            return 0
+        cursors = {s: self.slots[s].cursor for s in prefilling}
+        tokens, n_valid = assemble_chunk(prefilling, cursors, self.n_slots,
+                                         self.prefill_chunk)
+        logits, self.cache = self._prefill(self.params, self.cache,
+                                           jnp.asarray(tokens),
+                                           jnp.asarray(n_valid))
+        self.metrics.on_device_call("prefill")
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for s in prefilling:
+            slot = self.slots[s]
+            slot.cursor += int(n_valid[s])
+            self.metrics.on_prefill_step(slot.rid)
+            if slot.cursor >= len(slot.prompt):
+                # the chunk containing the last prompt token yields the
+                # first generated token — TTFT lands here
+                self._emit_first_token(s, int(nxt[s]),
+                                       np.asarray(logits[s]), tick)
+        return 1
+
+    def _decode_phase(self, tick: int) -> int:
+        stepwise_prefill = (self.prefill_mode == "full")
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for s, slot in enumerate(self.slots):
+            if slot.state is SlotState.DECODING:
+                tokens[s, 0] = slot.pending_token
+                active[s] = True
+            elif stepwise_prefill and slot.state is SlotState.PREFILLING:
+                tokens[s, 0] = slot.prompt[slot.cursor]
+                active[s] = True
+        if not active.any():
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(active))
+        self.metrics.on_device_call("decode")
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for s, slot in enumerate(self.slots):
+            if not active[s]:
+                continue
+            if slot.state is SlotState.PREFILLING:
+                slot.cursor += 1
+                self.metrics.on_prefill_step(slot.rid)
+                if slot.cursor >= len(slot.prompt):
+                    self._emit_first_token(s, int(nxt[s]),
+                                           np.asarray(logits[s]), tick)
+                continue
+            tok = int(nxt[s])
+            self.outputs[slot.rid].append(tok)
+            slot.pending_token = tok
+            self.metrics.on_token(slot.rid)
+            if len(self.outputs[slot.rid]) >= slot.gen_len:
+                self._release(s, tick)
+        return 1
+
+    # ------------------------------------------------------------- helpers
+
+    def _emit_first_token(self, s: int, token: int, logits: np.ndarray,
+                          tick: int):
+        slot = self.slots[s]
+        slot.state = SlotState.DECODING
+        slot.pending_token = token
+        self.outputs[slot.rid].append(token)
+        self.first_logits[slot.rid] = logits
+        self.metrics.on_first_token(slot.rid, tick)
+        self.metrics.on_token(slot.rid)
+        if slot.gen_len <= 1:
+            self._release(s, tick)
+
+    def _release(self, s: int, tick: int):
+        slot = self.slots[s]
+        self.metrics.on_done(slot.rid, tick)
+        iv = self._open_interval.pop(s, None)
+        if iv is not None:
+            iv.release_tick = tick + 1
+        self.slots[s] = _Slot()           # FREE; cache zeroed at next admit

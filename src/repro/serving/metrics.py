@@ -1,0 +1,154 @@
+"""Serving metrics: TTFT, per-token latency, throughput, queue depth.
+
+Two clocks, kept separate on purpose:
+
+  * ENGINE TICKS / DEVICE STEPS — deterministic, trace-reproducible.
+    TTFT in ticks and steps-per-served-token are what benchmarks guard
+    (they cannot flake with machine load).
+  * WALL CLOCK — tokens/sec and per-token latency, measured around the
+    engine run for reporting only; traces themselves carry no wall time.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int
+    gen_len: int
+    arrival: float
+    admitted_tick: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    prefill_steps: int = 0            # device calls spent filling the cache
+
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        """Arrival -> first generated token, in engine ticks."""
+        if self.first_token_tick is None:
+            return None
+        return self.first_token_tick - int(self.arrival)
+
+
+@dataclass
+class TickMetrics:
+    tick: int
+    queue_depth: int
+    n_prefilling: int
+    n_decoding: int
+    device_calls: int
+
+
+class MetricsRecorder:
+    """Accumulates per-request and per-tick serving metrics."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.ticks: List[TickMetrics] = []
+        self.decode_calls = 0
+        self.prefill_calls = 0
+        self.generated_tokens = 0
+        self._t0: Optional[float] = None
+        self._wall: float = 0.0
+
+    @property
+    def device_calls(self) -> int:
+        return self.decode_calls + self.prefill_calls
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self):
+        if self._t0 is not None:
+            self._wall = time.monotonic() - self._t0
+            self._t0 = None
+
+    # -- events ------------------------------------------------------------
+    def on_submit(self, rid, prompt_len, gen_len, arrival):
+        self.requests[rid] = RequestMetrics(
+            rid=rid, prompt_len=prompt_len, gen_len=gen_len, arrival=arrival)
+
+    def on_admit(self, rid, tick):
+        self.requests[rid].admitted_tick = tick
+
+    def on_prefill_step(self, rid):
+        self.requests[rid].prefill_steps += 1
+
+    def on_first_token(self, rid, tick):
+        self.requests[rid].first_token_tick = tick
+
+    def on_token(self, rid):
+        self.generated_tokens += 1
+
+    def on_done(self, rid, tick):
+        self.requests[rid].done_tick = tick
+
+    def on_tick(self, tick, queue_depth, n_prefilling, n_decoding,
+                device_calls):
+        self.ticks.append(TickMetrics(tick, queue_depth, n_prefilling,
+                                      n_decoding, device_calls))
+
+    def on_device_call(self, kind: str):
+        if kind == "decode":
+            self.decode_calls += 1
+        elif kind == "prefill":
+            self.prefill_calls += 1
+
+    # -- summaries ---------------------------------------------------------
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values()
+                if r.first_token_tick is not None]
+        ttfts = sorted(r.ttft_ticks for r in done)
+
+        def pct(xs, q):
+            if not xs:
+                return None
+            return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+        toks = self.generated_tokens
+        calls = max(self.device_calls, 1)
+        qd = [t.queue_depth for t in self.ticks]
+        return {
+            "n_requests": len(self.requests),
+            "n_completed": sum(r.done_tick is not None
+                               for r in self.requests.values()),
+            "generated_tokens": toks,
+            "engine_ticks": len(self.ticks),
+            "device_calls": self.device_calls,
+            "decode_calls": self.decode_calls,
+            "prefill_calls": self.prefill_calls,
+            "tokens_per_step": toks / calls,
+            "steps_per_token": calls / max(toks, 1),
+            "ttft_ticks_mean": (sum(ttfts) / len(ttfts)) if ttfts else None,
+            "ttft_ticks_p50": pct(ttfts, 0.50),
+            "ttft_ticks_p95": pct(ttfts, 0.95),
+            "prefill_steps_per_request_mean": (
+                sum(r.prefill_steps for r in done) / len(done)
+                if done else None),
+            "queue_depth_mean": (sum(qd) / len(qd)) if qd else 0.0,
+            "queue_depth_max": max(qd) if qd else 0,
+            "wall_s": self._wall,
+            "tokens_per_sec": (toks / self._wall) if self._wall else None,
+            "per_token_latency_ms": (1e3 * self._wall / toks
+                                     if self._wall and toks else None),
+        }
+
+    def per_request(self) -> List[dict]:
+        out = []
+        for r in sorted(self.requests.values(), key=lambda r: r.rid):
+            out.append({
+                "rid": r.rid, "prompt_len": r.prompt_len,
+                "gen_len": r.gen_len, "arrival": r.arrival,
+                "admitted_tick": r.admitted_tick,
+                "first_token_tick": r.first_token_tick,
+                "done_tick": r.done_tick,
+                "ttft_ticks": r.ttft_ticks,
+                "prefill_steps": r.prefill_steps,
+            })
+        return out

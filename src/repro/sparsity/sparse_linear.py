@@ -318,9 +318,11 @@ def build_stacked_tables(params, cfg: ModelConfig,
     mode "joint" packs at cfg.dbpim_value_sparsity (column-balanced tile
     pruning + INT8/FTA payload: (1 - vs) * 0.5 of dense bf16 weight
     traffic); "bit" packs the same layout at zero value sparsity (0.5x
-    traffic). "dense" and "value" return None — the forwards fall back to
-    plain matmuls (value-level-only serving needs an fp payload the joint
-    layout does not carry; ROADMAP item).
+    traffic); "value" packs the bf16-PAYLOAD variant of the same layout
+    (compacted blocks hold the raw bf16 weights with unit scales:
+    (1 - vs) of dense traffic, no bit-level compression) so value-only
+    sparsity also serves end-to-end through the scan. "dense" returns
+    None — plain matmuls.
 
     Returns None (dense serving) for unsupported families. bk/bn default
     to the kernel tile, clamped down to the padded projection dims so
@@ -331,12 +333,14 @@ def build_stacked_tables(params, cfg: ModelConfig,
     mode = mode or (cfg.dbpim_mode if cfg.dbpim else "dense")
     if mode not in KERNEL_MODES:
         raise ValueError(f"mode {mode!r} not in {KERNEL_MODES}")
-    if mode in ("dense", "value"):
+    if mode == "dense":
         return None
-    vs = value_sparsity if value_sparsity is not None else \
-        (cfg.dbpim_value_sparsity if mode == "joint" else 0.0)
     if mode == "bit":
         vs = 0.0
+    else:
+        vs = value_sparsity if value_sparsity is not None else \
+            cfg.dbpim_value_sparsity
+    payload = "bf16" if mode == "value" else "int8"
     projections = _stacked_projections(params, cfg)
     if projections is None:
         return None
@@ -349,7 +353,8 @@ def build_stacked_tables(params, cfg: ModelConfig,
         bk_eff = bk if bk is not None else min(ops.BK, _round8(w.shape[1]))
         bn_eff = bn if bn is not None else min(ops.BN, _round8(w.shape[2]))
         packed = ops.pack_joint_sparse_stacked(
-            w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff)
+            w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff,
+            payload=payload)
         arrays[name] = {"w_blocks": packed.w_blocks, "idx": packed.idx,
                        "scales": packed.scales, "nblocks": packed.nblocks}
         static[name] = (packed.k, packed.n, packed.k_pad)

@@ -32,8 +32,8 @@ def _quant_ref(w, mask):
     return (np.asarray(q) * m).astype(np.float32) * scales.reshape(1, -1)
 
 
-def _setup(arch, vs=0.5, dtype="float32"):
-    cfg = get_config(arch, reduced=True, dbpim_mode="joint").scaled(
+def _setup(arch, vs=0.5, dtype="float32", mode="joint"):
+    cfg = get_config(arch, reduced=True, dbpim_mode=mode).scaled(
         dtype=dtype, dbpim_value_sparsity=vs)
     params = init_params(cfg, jax.random.PRNGKey(0))
     tables = build_stacked_tables(params, cfg, bk=32, bn=32)
@@ -158,6 +158,67 @@ def test_small_m_row_tile_selection():
     want = x @ jnp.asarray(ops.unpack_joint_sparse(packed))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------- value-only (bf16) --------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_value_mode_packs_bf16_payload_and_serves(arch):
+    """dbpim_mode="value" builds bf16-PAYLOAD stacked tables (compacted
+    blocks hold the raw pruned weights, unit scales — value level only,
+    no bit-level grid) and serves forward + decode through the scan to
+    the same tolerance contract as joint."""
+    cfg, params, tables = _setup(arch, mode="value")
+    for t in tables.arrays.values():
+        assert t["w_blocks"].dtype == jnp.bfloat16
+        assert np.asarray(t["scales"] == 1.0).all()
+    recon = reconstruct_stacked_params(params, tables, cfg)
+    toks = jnp.asarray(np.random.default_rng(6).integers(
+        1, cfg.vocab_size, (2, 16)), jnp.int32)
+    got = forward(params, toks, cfg, tables=tables)
+    want = forward(recon, toks, cfg)
+    tol = 1e-4 * max(float(jnp.max(jnp.abs(want))), 1.0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+    cache = init_cache(cfg, 2, 8)
+    tok = jnp.asarray([[3], [5]], jnp.int32)
+    gl, _ = decode_step(params, cache, tok, cfg, tables=tables)
+    wl, _ = decode_step(recon, cache, tok, cfg)
+    np.testing.assert_allclose(
+        np.asarray(gl, np.float32), np.asarray(wl, np.float32),
+        atol=1e-4 * max(float(jnp.max(jnp.abs(wl))), 1.0))
+
+
+def test_value_mode_payload_is_unquantized_and_halves_traffic_vs_dense():
+    """The value payload is the PRUNED weights themselves (bf16 cast, not
+    the INT8 grid), and at 0.5 value sparsity the decode weight traffic
+    lands strictly between joint (x0.25 on eligible bytes) and dense."""
+    cfg, params, tables = _setup("tinyllama-1.1b", mode="value")
+    # unpacked value tables == bf16(weights) * mask, NOT a 127-level grid
+    name, t = next(iter(tables.arrays.items()))
+    k, n, k_pad = tables.static[name]
+    packed = ops.JointPackedStacked(t["w_blocks"], t["idx"], t["scales"],
+                                    t["nblocks"], k, n, k_pad)
+    dense = ops.unpack_joint_sparse_stacked(packed)
+    kept = dense[dense != 0]
+    w0 = np.asarray(params["blocks"]["attn"][name]
+                    if name in ("wq", "wk", "wv", "wo")
+                    else params["blocks"]["mlp"][name], np.float32)
+    bf16_vals = np.asarray(jnp.asarray(w0, jnp.bfloat16), np.float32)
+    assert np.isin(kept, bf16_vals).all()
+
+    cache = init_cache(cfg, 4, 16)
+    tok = jnp.ones((4, 1), jnp.int32)
+    dense_wb = analyze(lambda p, c, t_: decode_step(p, c, t_, cfg),
+                       params, cache, tok)["weight_bytes"]
+    value_wb = analyze(
+        lambda p, c, t_: decode_step(p, c, t_, cfg, tables=tables),
+        params, cache, tok)["weight_bytes"]
+    _, _, joint_tables = _setup("tinyllama-1.1b", mode="joint")
+    joint_wb = analyze(
+        lambda p, c, t_: decode_step(p, c, t_, cfg, tables=joint_tables),
+        params, cache, tok)["weight_bytes"]
+    assert joint_wb < value_wb < dense_wb
 
 
 # ----------------------------------------- serving graph + traffic --------
