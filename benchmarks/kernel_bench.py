@@ -95,6 +95,49 @@ def _stacked_case(rows):
                  f"rel_err={err:.1e}"))
 
 
+def _ssm_parallel_prefill_case(rows):
+    """Stacked-SSM parallel-form prefill driven through the Pallas joint
+    path: one decode_chunk with the default parallel SSD chunk
+    (models.ssm.prefill_ssm_parallel — in/out projections read once per
+    chunk) vs the exact per-token recurrence, both over the SAME stacked
+    joint tables. Guards the tolerance contract
+    (models.ssm.PARALLEL_PREFILL_ATOL) on the kernel path itself."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import decode_chunk, init_cache, init_params
+    from repro.models.ssm import PARALLEL_PREFILL_ATOL
+    from repro.sparsity.sparse_linear import build_stacked_tables
+
+    cfg = get_config("mamba2-1.3b", reduced=True, dbpim_mode="joint")
+    cfg = cfg.scaled(dtype="float32", dbpim_value_sparsity=0.5)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg, bk=32, bn=32)
+    rng = np.random.default_rng(5)
+    B, C = 2, 8
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, C)), jnp.int32)
+    nv = jnp.full((B,), C, jnp.int32)
+    cache = init_cache(cfg, B, 32)
+    cache["pos"] = jnp.zeros((B,), jnp.int32)
+
+    (lp, cache_p), us = timed(
+        lambda: decode_chunk(params, cache, toks, nv, cfg, tables=tables))
+    le, cache_e = decode_chunk(params, cache, toks, nv,
+                               cfg.scaled(prefill_exact=True),
+                               tables=tables)
+    atol = PARALLEL_PREFILL_ATOL[cfg.dtype]
+    dl = float(jnp.max(jnp.abs(lp.astype(jnp.float32)
+                               - le.astype(jnp.float32))))
+    ds = float(jnp.max(jnp.abs(cache_p["ssm"]["state"]
+                               - cache_e["ssm"]["state"])))
+    if not (dl <= atol and ds <= atol):
+        raise RuntimeError(
+            f"stacked-SSM parallel prefill diverged from the exact chunk: "
+            f"max|dlogit|={dl:.2e} max|dstate|={ds:.2e} > atol={atol}")
+    rows.append(("kernel.ssm_parallel_prefill", us,
+                 f"C={C} proj_reads 1 vs {C} (parallel vs exact) "
+                 f"max|dlogit|={dl:.1e} max|dstate|={ds:.1e} atol={atol}"))
+
+
 def run(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
@@ -128,6 +171,9 @@ def run(smoke: bool = False):
 
     # stacked joint pack driven through a scan — the serving layout
     _stacked_case(rows)
+
+    # parallel-form SSM prefill through the stacked Pallas path
+    _ssm_parallel_prefill_case(rows)
 
     # dbmu bit-true sim
     from repro.core import fta as fta_mod, dyadic

@@ -22,7 +22,7 @@ DBPIM_MODES = ("dense", "value", "bit", "joint")
 
 
 def get_config(arch: str, reduced: bool = False,
-               dbpim_mode: str = None):
+               dbpim_mode: str = None, prefill_exact: bool = None):
     """Load the ModelConfig for `arch`. reduced=True returns the small
     smoke-test variant of the same family. dbpim_mode selects the DB-PIM
     kernel path ("dense" | "value" | "bit" | "joint") the serving stack
@@ -32,7 +32,11 @@ def get_config(arch: str, reduced: bool = False,
     payload) and "value" (bf16 payload, value level only) change the
     compiled serving HLO end-to-end (dense-attention and SSM families;
     per-layer hooks via build_kernel_tables -> models.layers.make_matmul
-    remain for the others)."""
+    remain for the others). prefill_exact=True forces SSM chunked
+    prefill onto the exact per-token recurrence (bit-identical to
+    decode, C x the projection traffic) instead of the default parallel
+    SSD form (one stacked-weight read per chunk, tolerance-equivalent —
+    models.ssm.PARALLEL_PREFILL_ATOL)."""
     if arch not in _MODULES:
         raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
     mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
@@ -42,6 +46,8 @@ def get_config(arch: str, reduced: bool = False,
             raise KeyError(f"unknown dbpim_mode {dbpim_mode!r}; "
                            f"choose from {DBPIM_MODES}")
         cfg = cfg.scaled(dbpim=True, dbpim_mode=dbpim_mode)
+    if prefill_exact is not None:
+        cfg = cfg.scaled(prefill_exact=prefill_exact)
     return cfg
 
 

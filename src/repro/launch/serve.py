@@ -17,6 +17,13 @@ network serves off the DB-PIM kernel ((1 - value_sparsity) * 0.5 of
 dense bf16 weight traffic). ``--dbpim-mode value`` serves the bf16-
 payload variant of the same layout ((1 - vs), value level only).
 
+SSM prefill chunks default to the parallel SSD form — one read of the
+stacked in/out projections per chunk instead of per token
+(models.ssm.prefill_ssm_parallel; tolerance-equivalent to decode) —
+``--prefill-exact`` restores the bit-identical per-token recurrence.
+``--schedule spf`` admits shortest-prompt-first (starvation bounded by
+``--spf-age-cap``) instead of FIFO.
+
 Load is a deterministic trace (serving.workload): Poisson arrivals at
 ``--arrival-rate`` requests/tick, prompt lengths from ``--prompt-len LO
 HI`` under ``--dist``, fixed ``--seed`` — no wall-clock in the trace.
@@ -72,6 +79,8 @@ def build_engine_and_trace(args, cfg):
                          max_len=args.max_len,
                          prefill_chunk=args.prefill_chunk,
                          prefill_mode=args.prefill_mode,
+                         schedule=args.schedule,
+                         spf_age_cap=args.spf_age_cap,
                          stacked_tables=stacked_tables, enc_out=enc_out)
     spec = WorkloadSpec(n_requests=args.requests,
                         arrival_rate=args.arrival_rate,
@@ -96,6 +105,18 @@ def main(argv=None):
     ap.add_argument("--prefill-mode", default="chunked",
                     choices=["chunked", "full"],
                     help="'full' = token-by-token baseline prefill")
+    ap.add_argument("--prefill-exact", action="store_true",
+                    help="SSM chunks: force the exact per-token recurrence "
+                         "(bit-identical to decode, C x the projection "
+                         "traffic) instead of the default parallel SSD "
+                         "form (one stacked-weight read per chunk, "
+                         "tolerance-equivalent)")
+    ap.add_argument("--schedule", default="fifo", choices=["fifo", "spf"],
+                    help="admission order: fifo, or shortest-prompt-first "
+                         "(spf; starvation bounded by --spf-age-cap)")
+    ap.add_argument("--spf-age-cap", type=int, default=8,
+                    help="spf: max times a request may be queue-jumped "
+                         "before it becomes urgent")
     ap.add_argument("--prompt-len", type=int, nargs=2, default=[4, 24],
                     metavar=("LO", "HI"))
     ap.add_argument("--arrival-rate", type=float, default=0.5,
@@ -112,11 +133,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced,
-                     dbpim_mode=args.dbpim_mode)
+                     dbpim_mode=args.dbpim_mode,
+                     prefill_exact=args.prefill_exact or None)
     engine, trace = build_engine_and_trace(args, cfg)
     if engine.prefill_mode != args.prefill_mode:
         print(f"[serve] {cfg.name}: chunked prefill unsupported for this "
               f"family; falling back to stepwise (full) prefill")
+    if engine.prefill_kind is not None:
+        print(f"[serve] prefill chunk math: {engine.prefill_kind} "
+              f"(schedule={engine.schedule})")
 
     outputs = engine.run(trace)
     s = engine.metrics.summary()

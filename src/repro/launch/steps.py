@@ -169,6 +169,7 @@ def build_slot_decode_step(cfg: ModelConfig, mesh: Mesh,
         logits, new_cache = decode_step(params, cache, token, cfg,
                                         tables=stacked_tables)
         return logits, merge_slots(new_cache, cache, active, cfg)
+    slot_decode_step.call_kind = "decode"
 
     def shardings(params, cache, token, active):
         pspec = _serving_param_specs(params, mesh)
@@ -187,11 +188,23 @@ def build_prefill_chunk_step(cfg: ModelConfig, mesh: Mesh,
     carries each slot's real token count this chunk (0 = slot not
     prefilling; its cache is untouched). stacked_tables threads the
     uniform-MAXB joint-sparse packs through the chunk's layer scan —
-    prompt chunks run the DB-PIM kernel exactly like decode steps do."""
+    prompt chunks run the DB-PIM kernel exactly like decode steps do.
+
+    The step fn carries a ``call_kind`` tag for per-kind cost attribution
+    (runtime.jaxpr_cost.analyze_call_kinds): SSM chunks default to the
+    parallel SSD form ("prefill_parallel" — one read of the stacked
+    in/out projections per chunk; models.ssm.prefill_ssm_parallel) and
+    fall back to the exact per-token recurrence ("prefill_chunk_exact")
+    when cfg.prefill_exact is set; attention chunks already project the
+    whole chunk in one matmul and are always exact."""
 
     def prefill_chunk_step(params, cache, tokens, n_valid):
         return decode_chunk(params, cache, tokens, n_valid, cfg,
                             tables=stacked_tables)
+    prefill_chunk_step.call_kind = (
+        "prefill_parallel"
+        if cfg.supports_parallel_prefill and not cfg.prefill_exact
+        else "prefill_chunk_exact")
 
     def shardings(params, cache, tokens, n_valid):
         pspec = _serving_param_specs(params, mesh)

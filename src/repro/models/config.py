@@ -65,6 +65,13 @@ class ModelConfig:
                                           # which sparsity level(s) the
                                           # serving kernels exploit
 
+    # serving prefill: False (default) lets SSM chunked prefill use the
+    # parallel SSD form — one in/out projection read per chunk instead of
+    # per token, tolerance-equivalent to sequential decode (models.ssm.
+    # PARALLEL_PREFILL_ATOL); True forces the exact per-token recurrence
+    # (bit-identical to decode, C x the projection traffic)
+    prefill_exact: bool = False
+
     # training
     remat: bool = True
     remat_policy: str = "full"    # full | dots (save matmul outputs)
@@ -118,6 +125,15 @@ class ModelConfig:
         if self.family == "ssm":
             return True
         return self.supports_stacked_tables and self.window == 0
+
+    @property
+    def supports_parallel_prefill(self) -> bool:
+        """SSM only: the parallel-form (SSD) chunk evaluates C prompt
+        tokens with ONE read of the stacked in/out projections instead of
+        C (models.ssm.prefill_ssm_parallel). Attention chunked prefill
+        already projects the whole chunk in one matmul, so there is no
+        separate parallel form to pick there."""
+        return self.family == "ssm" and self.supports_chunked_prefill
 
     def scaled(self, **kw) -> "ModelConfig":
         return replace(self, **kw)

@@ -179,11 +179,16 @@ def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
 
     Returns (logits (B, 1, V) of each slot's LAST VALID token — the
     first-generated-token logits when the chunk completes a prompt — and
-    the cache advanced by n_valid per slot). Per-token math is
-    bit-identical to running `decode_step` n_valid times, but the chunk is
-    one fixed-shape device step: time-to-first-token is ceil(P/C) steps
-    instead of P, and the unembedding runs once per chunk instead of once
-    per prompt token.
+    the cache advanced by n_valid per slot). The chunk is one fixed-shape
+    device step: time-to-first-token is ceil(P/C) steps instead of P, and
+    the unembedding runs once per chunk instead of once per prompt token.
+
+    Per-token math vs running `decode_step` n_valid times: bit-identical
+    for attention families and for SSM with cfg.prefill_exact=True. The
+    default SSM path is the parallel SSD form (ssm.prefill_ssm_parallel)
+    — the in/out projections are read ONCE per chunk instead of once per
+    token, at the cost of tolerance-level (ssm.PARALLEL_PREFILL_ATOL)
+    instead of bitwise equivalence.
 
     Like decode_step, `tables` threads the uniform-MAXB joint-sparse packs
     through the layer scan, so prompt chunks run the DB-PIM kernel too.
@@ -207,10 +212,13 @@ def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
     new_cache = dict(cache)
 
     if cfg.family == "ssm":
+        ssm_prefill = (ssm_mod.prefill_ssm if cfg.prefill_exact
+                       else ssm_mod.prefill_ssm_parallel)
+
         def step(h, inp):
             p, conv, state, slices = inp
             hn = apply_norm(p["norm1"], h, cfg)
-            y, new_conv, new_state = ssm_mod.prefill_ssm(
+            y, new_conv, new_state = ssm_prefill(
                 p["ssm"], hn, conv, state, n_valid, cfg,
                 dense_fn=layer_mm(slices))
             return h + y, (new_conv, new_state)

@@ -72,6 +72,40 @@ def _gated_norm(y, z, scale, eps=1e-6):
     return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
 
 
+def _ssd_chunk(state, xq, bq, cq, dtq, A):
+    """One parallel-form SSD chunk (arXiv:2405.21060 §6): Q tokens in
+    matrix form against a carried state.
+
+    state (B, H, P, N) f32; xq (B, Q, H, P); bq/cq (B, Q, N);
+    dtq (B, Q, H) f32 (already softplus'd — a token with dtq == 0 is an
+    exact identity on the state and contributes nothing, which is how the
+    prefill path masks invalid slots); A (H,) f32. Returns
+    (new_state, y (B, Q, H, P) f32). Shared by the training forward
+    (apply_ssm) and the serving parallel prefill (prefill_ssm_parallel).
+    """
+    Q = dtq.shape[1]
+    cum = jnp.cumsum(dtq * A, axis=1)                      # (B,Q,H)
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (c_i.b_j) x_j
+    seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bqn,bkn->bqk", cq.astype(jnp.float32),
+                    bq.astype(jnp.float32))                # (B,Q,Q)
+    w = cb[:, :, :, None] * decay * dtq[:, None, :, :]     # (B,Q,Q,H)
+    xf = xq.astype(jnp.float32)
+    y = jnp.einsum("bqkh,bkhp->bqhp", w, xf)
+    # inter-chunk: contribution of the carried state
+    dec0 = jnp.exp(cum)                                    # (B,Q,H)
+    y += jnp.einsum("bqn,bqh,bhpn->bqhp", cq.astype(jnp.float32),
+                    dec0, state)
+    # state update
+    decT = jnp.exp(cum[:, -1:, :] - cum)                   # (B,Q,H)
+    contrib = jnp.einsum("bqh,bqn,bqhp->bhpn",
+                         decT * dtq, bq.astype(jnp.float32), xf)
+    new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
+    return new_state, y
+
+
 def apply_ssm(p, x, cfg: ModelConfig, dense_fn=None):
     """Training / prefill forward. x (B, L, D) -> (B, L, D).
 
@@ -91,45 +125,23 @@ def apply_ssm(p, x, cfg: ModelConfig, dense_fn=None):
     xs = xs.reshape(Bsz, L, nh, P)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,nh)
     A = -jnp.exp(p["A_log"])                                          # (nh,)
-    dA = dt * A                                                       # (B,L,nh)
 
     # chunk views: (nc, B, Q, ...)
     def chunkify(t):
         return jnp.moveaxis(t.reshape(Bsz, nc, Q, *t.shape[2:]), 0, 1)
     xs_c, B_c, C_c = chunkify(xs), chunkify(Bmat), chunkify(Cmat)
-    dt_c, dA_c = chunkify(dt), chunkify(dA)
+    dt_c = chunkify(dt)
 
     def chunk_step(state, inp):
-        xq, bq, cq, dtq, daq = inp          # (B,Q,...)
-        cum = jnp.cumsum(daq, axis=1)       # (B,Q,nh)
-        # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (c_i.b_j) x_j
-        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,nh)
-        tri = jnp.tril(jnp.ones((Q, Q), bool))
-        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
-        cb = jnp.einsum("bqn,bkn->bqk", cq.astype(jnp.float32),
-                        bq.astype(jnp.float32))                # (B,Q,Q)
-        w = cb[:, :, :, None] * decay * dtq[:, None, :, :]     # (B,Q,Q,nh)
-        y = jnp.einsum("bqkh,bkhp->bqhp", w, xs_f(xq))
-        # inter-chunk: contribution of the carried state
-        dec0 = jnp.exp(cum)                                    # (B,Q,nh)
-        y += jnp.einsum("bqn,bqh,bhpn->bqhp", cq.astype(jnp.float32),
-                        dec0, state)
-        # state update
-        decT = jnp.exp(cum[:, -1:, :] - cum)                   # (B,Q,nh)
-        contrib = jnp.einsum("bqh,bqn,bqhp->bhpn",
-                             decT * dtq, bq.astype(jnp.float32), xs_f(xq))
-        new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + contrib
-        return new_state, y
-
-    def xs_f(t):
-        return t.astype(jnp.float32)
+        xq, bq, cq, dtq = inp               # (B,Q,...)
+        return _ssd_chunk(state, xq, bq, cq, dtq, A)
 
     state0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
     # remat the chunk body: its (B, Q, Q, nh) f32 intra-chunk tensors
     # otherwise persist as backward residuals for EVERY chunk (~70 GB/dev
     # for jamba train_4k).
     _, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0,
-                         (xs_c, B_c, C_c, dt_c, dA_c))
+                         (xs_c, B_c, C_c, dt_c))
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, nh, P)
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(Bsz, L, d_in).astype(x.dtype)
@@ -204,3 +216,70 @@ def prefill_ssm(p, x, conv_state, ssm_state, n_valid, cfg: ModelConfig,
         step, (conv_state, ssm_state), (xs, jnp.arange(C)))
     y = jnp.moveaxis(ys[:, :, 0, :], 0, 1)             # (B, C, D)
     return y, conv, state
+
+
+#: Equivalence contract of the parallel-form prefill: max |logit delta|
+#: against the sequential decode recurrence over a full prompt, keyed by
+#: activation dtype. The parallel chunk reassociates the f32 state
+#: accumulation (exp(cum_i - cum_j) segment products instead of a running
+#: product), so results are tolerance-equal, not bitwise. Guarded by
+#: tests/test_parallel_prefill.py and benchmarks/serve_engine_bench.py;
+#: cfg.prefill_exact=True restores bit-identity at C x the weight traffic.
+#: bf16 headroom: logits of O(10) magnitude have ~0.0625 ulp, and the two
+#: accumulation orders legitimately land a few ulps apart (0.25 observed
+#: on the reduced mamba2 config).
+PARALLEL_PREFILL_ATOL = {"float32": 2e-4, "bfloat16": 0.5}
+
+
+def prefill_ssm_parallel(p, x, conv_state, ssm_state, n_valid,
+                         cfg: ModelConfig, dense_fn=None):
+    """Parallel-form (SSD) chunked prefill: C prompt tokens with ONE read
+    of the in/out projections, instead of the C reads the exact per-token
+    recurrence (prefill_ssm) pays.
+
+    Same signature and cache semantics as prefill_ssm: x (B, C, D);
+    conv_state (B, W-1, Ch); ssm_state (B, nh, P, N); n_valid (B,) in
+    [0, C]. The in-projection runs as one batched matmul over the whole
+    chunk (through the stacked joint tables when dense_fn is hooked — the
+    packed weights stream from HBM once per chunk), the causal conv slides
+    over [conv_state ++ chunk], and the recurrence is evaluated in the
+    training-style matrix form (_ssd_chunk) seeded with the carried
+    state. Invalid positions (>= n_valid, incl. idle slots with 0) are
+    masked by zeroing dt — an exact identity on the state — and the new
+    conv window is gathered at each slot's n_valid cursor, so ragged
+    tails and idle slots leave their caches untouched, exactly like the
+    exact path. Numerics: tolerance-equal to sequential decode
+    (PARALLEL_PREFILL_ATOL), not bitwise — the f32 accumulation is
+    reassociated. Returns (y (B, C, D), new_conv, new_state).
+    """
+    mm = dense_fn or (lambda w, v, name: v @ w)
+    Bsz, C, _ = x.shape
+    d_in, nh, N, P = ssm_dims(cfg)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+
+    z, xbc, dt_raw = _split_proj(mm(p["in_proj"], x, "in_proj"), cfg)
+    # causal conv over the carried prefix: window[t + i] for i in [0, W)
+    # reproduces decode's per-token ring window at position t
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)],
+                             axis=1)                   # (B, W-1+C, Ch)
+    conv = sum(window[:, i:i + C, :] * p["conv_w"][i] for i in range(W))
+    xbc_t = jax.nn.silu(conv + p["conv_b"])
+    # new conv window ends at the last VALID token: indices
+    # n_valid .. n_valid+W-2 of `window` (n_valid=0 -> conv_state back
+    # unchanged; gathers never read past xbc[n_valid-1], so invalid-slot
+    # garbage can't leak into the cache)
+    gather = n_valid[:, None] + jnp.arange(W - 1)[None, :]     # (B, W-1)
+    new_conv = jnp.take_along_axis(window, gather[:, :, None], axis=1)
+
+    xs, Bmat, Cmat = jnp.split(xbc_t, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(Bsz, C, nh, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]          # (B, C)
+    dt = jnp.where(valid[:, :, None], dt, 0.0)   # dt=0: state identity
+    A = -jnp.exp(p["A_log"])
+    new_state, y = _ssd_chunk(ssm_state, xs, Bmat, Cmat, dt, A)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, C, d_in).astype(x.dtype)
+    out = mm(p["out_proj"], _gated_norm(y, z, p["norm_scale"]), "out_proj")
+    return out, new_conv, new_state

@@ -214,3 +214,18 @@ def analyze(fn, *args) -> Dict[str, float]:
     arg_bytes = sum(_bytes(v.aval) for v in closed.jaxpr.invars)
     acc["arg_bytes"] = float(arg_bytes)
     return acc
+
+
+def analyze_call_kinds(calls: Dict[str, tuple]) -> Dict[str, Dict[str, float]]:
+    """Per-engine-call-kind cost attribution.
+
+    `calls` maps a call kind — the serving engine's executables, e.g.
+    "decode" / "prefill_chunk_exact" / "prefill_parallel" (the builders in
+    launch.steps annotate their step fns with a matching ``call_kind``) —
+    to an ``(fn, args)`` tuple. Each kind is traced and walked separately,
+    so weight_bytes (and every other tally) stays attributable to the
+    call that pays it instead of collapsing into one blended number: the
+    chunked-prefill traffic savings the benchmarks guard are per-KIND
+    contracts (a parallel SSM chunk reads its projections once, an exact
+    chunk C times, a decode step once per token)."""
+    return {kind: analyze(fn, *args) for kind, (fn, args) in calls.items()}

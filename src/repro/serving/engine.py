@@ -26,6 +26,22 @@ in-flight decodes — decoding slots emit a token every tick regardless of
 arrivals. In "full" prefill mode (the baseline), prompt tokens instead
 ride the decode call one at a time.
 
+Admission order (``schedule``):
+
+  * "fifo" (default) — strictly arrival order from one queue;
+  * "spf" — shortest-prompt-first among ARRIVED requests: under mixed
+    (bimodal) loads, short prompts stop queueing behind long prefills
+    and mean TTFT drops. Starvation is bounded by ``spf_age_cap``:
+    every shortest-first admission raises the skip count of every other
+    arrived request it passed over; at the cap a request becomes urgent
+    and is admitted before any non-urgent request (oldest-arrival
+    first; urgent admissions are forced fairness, not jumps, and raise
+    no counts). A non-urgent pick only happens when NOBODY is urgent,
+    so skips <= spf_age_cap is a hard bound — no request is ever passed
+    over by shortest-first picks more than ``spf_age_cap`` times, even
+    when every request arrives at once — the invariant
+    tests/test_serving_engine.py holds the scheduler to.
+
 Per-slot cache positions: cache["pos"] is a (B,) vector — slots hold
 requests at different depths, which is what the vectorized
 decode_attention / decode_chunk paths exist for.
@@ -87,13 +103,19 @@ class ServeEngine:
         print(engine.metrics.summary())
     """
 
+    SCHEDULES = ("fifo", "spf")
+
     def __init__(self, cfg, params, *, mesh=None, n_slots: int = 4,
                  max_len: int = 64, prefill_chunk: int = 16,
-                 prefill_mode: str = "chunked", stacked_tables=None,
+                 prefill_mode: str = "chunked", schedule: str = "fifo",
+                 spf_age_cap: int = 8, stacked_tables=None,
                  enc_out=None, max_ticks: int = 100_000):
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
                              f"{PREFILL_MODES}")
+        if schedule not in self.SCHEDULES:
+            raise ValueError(f"schedule {schedule!r} not in "
+                             f"{self.SCHEDULES}")
         if prefill_mode == "chunked" and not cfg.supports_chunked_prefill:
             # windowed / MoE / hybrid / enc-dec families: chunk semantics
             # can't reproduce sequential decode — serve them stepwise
@@ -104,6 +126,8 @@ class ServeEngine:
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.prefill_mode = prefill_mode
+        self.schedule = schedule
+        self.spf_age_cap = spf_age_cap
         self.max_ticks = max_ticks
 
         self.params = params
@@ -136,7 +160,14 @@ class ServeEngine:
             self._reset = jax.jit(
                 lambda c, m: reset_slots(c, m, cfg), donate_argnums=(0,))
 
+        # which chunk math this engine's prefill executable compiles to
+        # ("prefill_parallel" / "prefill_chunk_exact"; None in "full" mode
+        # where prompt tokens ride the decode call)
+        self.prefill_kind = (self._prefill.call_kind
+                             if self._prefill is not None else None)
+
         self.queue: deque = deque()
+        self.skips: Dict[int, int] = {}   # rid -> times queue-jumped (spf)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.tick_count = 0
         self.outputs: Dict[int, List[int]] = {}
@@ -154,6 +185,7 @@ class ServeEngine:
                 f"request {request.rid}: prompt {request.prompt_len} + "
                 f"gen {request.gen_len} exceeds max_len {self.max_len}")
         self.queue.append(request)
+        self.skips[request.rid] = 0
         self.metrics.on_submit(request.rid, request.prompt_len,
                                request.gen_len, request.arrival)
 
@@ -192,17 +224,47 @@ class ServeEngine:
 
     # -------------------------------------------------------------- phases
 
+    def _pop_next(self, tick: int):
+        """Next request to admit, or None. "fifo" pops the head once it
+        has arrived. "spf" picks the shortest ARRIVED prompt — unless a
+        request has already been passed over ``spf_age_cap`` times, in
+        which case the oldest such urgent request goes first. Every
+        NON-urgent (shortest-first) pick raises the skip count of every
+        other arrived request; urgent picks raise none (forced fairness
+        is not a jump). Since a non-urgent pick requires the urgent set
+        to be empty, a request at the cap can never be incremented
+        again: skips[rid] <= spf_age_cap always, and deferral is bounded
+        even when all requests arrive simultaneously."""
+        arrived = [r for r in self.queue if r.arrival <= tick]
+        if not arrived:                   # queue is arrival-sorted
+            return None
+        if self.schedule == "fifo":
+            req = arrived[0]
+        else:
+            urgent = [r for r in arrived
+                      if self.skips[r.rid] >= self.spf_age_cap]
+            if urgent:
+                req = urgent[0]           # oldest urgent arrival
+            else:
+                req = min(arrived,
+                          key=lambda r: (r.prompt_len, r.arrival, r.rid))
+                for r in arrived:
+                    if r is not req:
+                        self.skips[r.rid] += 1
+        self.queue.remove(req)
+        return req
+
     def _admit(self, tick: int):
         """QUEUED -> PREFILLING: pop arrived requests into free slots and
         ZERO the slots' stale cache slices (the previous occupant's
         KV/SSM state must not leak into the new request)."""
         mask = np.zeros((self.n_slots,), bool)
         for s, slot in enumerate(self.slots):
-            if slot.state is not SlotState.FREE or not self.queue:
+            if slot.state is not SlotState.FREE:
                 continue
-            if self.queue[0].arrival > tick:
-                break                     # trace is arrival-sorted
-            req = self.queue.popleft()
+            req = self._pop_next(tick)
+            if req is None:
+                break
             slot.state = SlotState.PREFILLING
             slot.rid = req.rid
             slot.prompt = np.asarray(req.prompt, np.int32)

@@ -12,9 +12,20 @@ Two prefill policies over the SAME per-slot caches:
     slots share the decode call with in-flight decodes, so this is the
     honest continuous-batching baseline, not a strawman.
 
-Both fill caches through identical per-token math (decode_chunk is
-bit-identical to sequential decode steps by construction), so the engine
-can swap policies without changing results — only step counts move.
+Within "chunked", the per-token math comes in two flavors, dispatched by
+ModelConfig (the compiled step's ``call_kind`` tag says which):
+
+  * exact ("prefill_chunk_exact") — attention families (a chunk already
+    projects all C tokens in one matmul) and SSM with
+    ``cfg.prefill_exact=True``: bit-identical to sequential decode.
+  * parallel SSD ("prefill_parallel") — the SSM default: the chunk is
+    evaluated in the training-style matrix form
+    (models.ssm.prefill_ssm_parallel), reading the stacked in/out
+    projections ONCE per chunk instead of once per token (~C x less SSM
+    prefill weight traffic), tolerance-equal to sequential decode
+    (models.ssm.PARALLEL_PREFILL_ATOL), not bitwise.
+
+Exact policies never change generated tokens — only step counts move.
 """
 
 from __future__ import annotations
@@ -65,9 +76,12 @@ def build_chunk_step(cfg, mesh, params, cache, n_slots: int, chunk: int,
     tok0 = jnp.zeros((n_slots, chunk), jnp.int32)
     nv0 = jnp.zeros((n_slots,), jnp.int32)
     pspec, cspec, tspec, nspec = shard_fn(params, cache, tok0, nv0)
-    return jax.jit(step_fn,
-                   in_shardings=(shr.named(pspec, mesh),
-                                 shr.named(cspec, mesh),
-                                 shr.named(tspec, mesh),
-                                 shr.named(nspec, mesh)),
-                   donate_argnums=(1,))
+    jitted = jax.jit(step_fn,
+                     in_shardings=(shr.named(pspec, mesh),
+                                   shr.named(cspec, mesh),
+                                   shr.named(tspec, mesh),
+                                   shr.named(nspec, mesh)),
+                     donate_argnums=(1,))
+    # per-kind cost attribution rides along (jaxpr_cost.analyze_call_kinds)
+    jitted.call_kind = step_fn.call_kind
+    return jitted

@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import (decode_chunk, decode_step, init_cache,
-                          init_params)
+from repro.models import decode_chunk, init_cache, init_params
 from repro.serving import (Request, ServeEngine, WorkloadSpec, assemble_chunk,
                            make_trace)
 from repro.sparsity.sparse_linear import build_stacked_tables
@@ -17,37 +16,20 @@ from repro.sparsity.sparse_linear import build_stacked_tables
 ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
 
 
-def _cfg(arch, dtype="float32", mode=None):
+def _cfg(arch, dtype="float32", mode=None, **kw):
     cfg = get_config(arch, reduced=True, dbpim_mode=mode)
-    return cfg.scaled(dtype=dtype, dbpim_value_sparsity=0.5)
+    return cfg.scaled(dtype=dtype, dbpim_value_sparsity=0.5, **kw)
 
 
-def _stepwise(params, cfg, prompts, max_len, tables=None):
-    """Reference: every prompt token through the (B, 1) decode step."""
-    B, P = prompts.shape
-    cache = init_cache(cfg, B, max_len)
-    cache["pos"] = jnp.zeros((B,), jnp.int32)
-    logits = None
-    for t in range(P):
-        logits, cache = decode_step(params, cache,
-                                    jnp.asarray(prompts[:, t:t + 1]), cfg,
-                                    tables=tables)
-    return logits, cache
+def _exact(cfg):
+    """BITWISE chunk==stepwise tests pin the exact per-token recurrence:
+    the SSM default is the parallel SSD form, which is tolerance-equal
+    only (tests/test_parallel_prefill.py owns that contract)."""
+    return cfg.scaled(prefill_exact=True) if cfg.family == "ssm" else cfg
 
 
-def _chunked(params, cfg, prompts, max_len, chunk, tables=None):
-    B, P = prompts.shape
-    cache = init_cache(cfg, B, max_len)
-    cache["pos"] = jnp.zeros((B,), jnp.int32)
-    logits = None
-    for s in range(0, P, chunk):
-        n = min(chunk, P - s)
-        toks = np.zeros((B, chunk), np.int32)
-        toks[:, :n] = prompts[:, s:s + n]
-        logits, cache = decode_chunk(params, cache, jnp.asarray(toks),
-                                     jnp.full((B,), n, jnp.int32), cfg,
-                                     tables=tables)
-    return logits, cache
+from conftest import chunked_prefill as _chunked
+from conftest import stepwise_prefill as _stepwise
 
 
 # ------------------------------------------------- chunked == stepwise ----
@@ -57,8 +39,10 @@ def _chunked(params, cfg, prompts, max_len, chunk, tables=None):
 def test_chunked_prefill_bit_identical_to_stepwise(arch, plen):
     """The acceptance guarantee: a chunked prefill (chunk=4, ragged tail)
     produces BIT-IDENTICAL caches and first-token logits to feeding the
-    prompt through sequential decode steps — transformer and SSM."""
-    cfg = _cfg(arch)
+    prompt through sequential decode steps — transformer and SSM (on the
+    exact-recurrence path; the parallel SSD default is tolerance-equal
+    and tested in test_parallel_prefill.py)."""
+    cfg = _exact(_cfg(arch))
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompts = np.random.default_rng(1).integers(
         1, cfg.vocab_size, (3, plen)).astype(np.int32)
@@ -74,7 +58,7 @@ def test_chunked_prefill_bit_identical_to_stepwise(arch, plen):
 def test_chunked_prefill_bit_identical_through_joint_tables(arch):
     """Same guarantee with the stacked joint-sparse tables threaded
     through both paths (prompt chunks run the DB-PIM kernel too)."""
-    cfg = _cfg(arch, mode="joint")
+    cfg = _exact(_cfg(arch, mode="joint"))
     params = init_params(cfg, jax.random.PRNGKey(0))
     tables = build_stacked_tables(params, cfg, bk=32, bn=32)
     assert tables is not None
@@ -197,6 +181,118 @@ def test_refilled_slot_matches_fresh_batch(arch):
     np.testing.assert_array_equal(
         np.asarray(shared.first_logits[1], np.float32),
         np.asarray(fresh.first_logits[1], np.float32))
+
+
+def test_spf_scheduler_invariants_random_trace():
+    """SPF admission keeps every scheduler invariant FIFO holds: all
+    requests complete with exactly gen_len tokens, one admission each, no
+    slot overlap — and the queue-jump count never exceeds the age cap."""
+    cfg = _cfg("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(WorkloadSpec(n_requests=10, arrival_rate=2.0,
+                                    prompt_len=(1, 9), gen_len=(1, 6),
+                                    dist="bimodal", seed=11),
+                       cfg.vocab_size)
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=16, prefill_chunk=4,
+                      schedule="spf", spf_age_cap=3)
+    outputs = eng.run(trace)
+    assert sorted(outputs) == [r.rid for r in trace]
+    for r in trace:
+        assert len(outputs[r.rid]) == r.gen_len
+    admits = [iv.rid for iv in eng.slot_log]
+    assert sorted(admits) == sorted(r.rid for r in trace)
+    by_slot = {}
+    for iv in eng.slot_log:
+        assert iv.release_tick is not None
+        by_slot.setdefault(iv.slot, []).append(iv)
+    for ivs in by_slot.values():
+        ivs.sort(key=lambda iv: iv.admit_tick)
+        for a, b in zip(ivs, ivs[1:]):
+            assert a.release_tick <= b.admit_tick
+    assert max(eng.skips.values()) <= 3                  # bounded age
+
+
+def test_spf_no_starvation_under_short_prompt_stream():
+    """The starvation bound: a long prompt that keeps being queue-jumped
+    by later-arriving short prompts becomes urgent after spf_age_cap
+    jumps and is admitted ahead of the remaining shorts — it can never
+    be deferred indefinitely."""
+    cfg = _cfg("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    cap = 2
+    # rid0 occupies the single slot at t=0, so the long prompt (rid1,
+    # also t=0) must QUEUE while later shorts keep arriving — each
+    # admission that picks a later-arriving short over it is one jump
+    blocker = Request(rid=0, prompt=tuple(
+        int(t) for t in rng.integers(1, cfg.vocab_size, 2)),
+        gen_len=2, arrival=0.0)
+    long_req = Request(rid=1, prompt=tuple(
+        int(t) for t in rng.integers(1, cfg.vocab_size, 10)),
+        gen_len=2, arrival=0.0)
+    shorts = [Request(rid=i, prompt=tuple(
+        int(t) for t in rng.integers(1, cfg.vocab_size, 2)),
+        gen_len=2, arrival=float(i - 1)) for i in range(2, 9)]
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=16, prefill_chunk=4,
+                      schedule="spf", spf_age_cap=cap)
+    outputs = eng.run([blocker, long_req] + shorts)
+    assert sorted(outputs) == list(range(9))             # all complete
+    assert eng.skips[1] == cap                           # jumped cap times
+    # urgent after `cap` jumps: only the blocker plus at most `cap`
+    # shorts ran before the long prompt — it is never deferred past that
+    order = [iv.rid for iv in sorted(eng.slot_log,
+                                     key=lambda iv: iv.admit_tick)]
+    assert order.index(1) <= cap + 1
+
+
+def test_spf_no_starvation_simultaneous_arrivals():
+    """The closed-loop batch corner (arrival_rate=0: every request at
+    t=0): skip counts must still rise on every shortest-first pass-over,
+    so a long prompt in an all-at-once batch is admitted after at most
+    spf_age_cap shorter requests, never last-by-default."""
+    cfg = _cfg("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(8)
+    cap = 2
+    reqs = [Request(rid=0, prompt=tuple(
+        int(t) for t in rng.integers(1, cfg.vocab_size, 10)),
+        gen_len=2, arrival=0.0)]
+    reqs += [Request(rid=i, prompt=tuple(
+        int(t) for t in rng.integers(1, cfg.vocab_size, 2)),
+        gen_len=2, arrival=0.0) for i in range(1, 6)]
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=16, prefill_chunk=4,
+                      schedule="spf", spf_age_cap=cap)
+    outputs = eng.run(reqs)
+    assert sorted(outputs) == list(range(6))
+    assert max(eng.skips.values()) <= cap
+    order = [iv.rid for iv in sorted(eng.slot_log,
+                                     key=lambda iv: iv.admit_tick)]
+    assert order.index(0) <= cap              # urgent after cap pass-overs
+
+
+def test_spf_fifo_equal_results_same_trace():
+    """Scheduling changes ADMISSION ORDER only: the token streams per
+    request are identical under fifo and spf (each request's math is
+    independent of when its slot was granted)."""
+    cfg = _cfg("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(WorkloadSpec(n_requests=6, arrival_rate=1.5,
+                                    prompt_len=(2, 12), gen_len=(2, 4),
+                                    dist="bimodal", seed=9),
+                       cfg.vocab_size)
+    outs = {}
+    for schedule in ("fifo", "spf"):
+        eng = ServeEngine(cfg, params, n_slots=2, max_len=24,
+                          prefill_chunk=4, schedule=schedule)
+        outs[schedule] = eng.run(trace)
+    assert outs["fifo"] == outs["spf"]
+
+
+def test_engine_rejects_bad_schedule():
+    cfg = _cfg("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, n_slots=1, max_len=8, schedule="lifo")
 
 
 def test_engine_rejects_oversized_requests():
