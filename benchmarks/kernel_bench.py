@@ -95,6 +95,50 @@ def _stacked_case(rows):
                  f"rel_err={err:.1e}"))
 
 
+def _grouped_case(rows):
+    """Grouped (L, E) expert pack driven through a layer scan with a
+    per-expert dispatch loop — the MoE serving layout smoke guard: every
+    (layer, expert) slice must match the dense reference of ITS slice,
+    and balanced pruning must leave zero padded slots group-wide."""
+    import jax
+    rng = np.random.default_rng(17)
+    L, E, M, K, N = 2, 4, 8, 256, 256
+    ws = rng.laplace(0, 0.02, (L, E, K, N)).astype(np.float32)
+    packed = ops.pack_joint_sparse_grouped(ws, value_sparsity=0.5)
+    nb = np.asarray(packed.nblocks)
+    if not (nb == packed.maxb).all():
+        raise RuntimeError(f"grouped pack has padded slots: nblocks={nb} "
+                           f"vs MAXB={packed.maxb}")
+    dense = ops.unpack_joint_sparse_grouped(packed)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+
+    def body(carry, slices):
+        wb, idx, sc, nbl = slices               # (E, ...) per layer
+        ys = [ops.joint_dense(
+            carry, ops.JointPacked(wb[e], idx[e], sc[e], nbl[e],
+                                   packed.k, packed.n, packed.k_pad))
+            for e in range(E)]
+        return carry, jnp.stack(ys)
+
+    xs = (packed.w_blocks, packed.idx, packed.scales, packed.nblocks)
+    (ys,), us = timed(lambda: (jax.lax.scan(body, x, xs)[1],))
+    err = 0.0
+    for l in range(L):
+        for e in range(E):
+            want = x @ jnp.asarray(dense[l, e])
+            err = max(err, float(jnp.max(jnp.abs(ys[l, e] - want))
+                                 / jnp.maximum(jnp.max(jnp.abs(want)),
+                                               1e-6)))
+    if not err < 1e-4:
+        raise RuntimeError(f"grouped joint scan diverged: rel_err={err}")
+    stored = ops.joint_storage_bytes(packed)
+    dense_bytes = 2 * L * E * K * N
+    rows.append(("kernel.joint.grouped_experts", us,
+                 f"L={L} E={E} MAXB={packed.maxb} bytes={stored} vs "
+                 f"dense_bf16={dense_bytes} ({stored/dense_bytes:.2f}x) "
+                 f"rel_err={err:.1e}"))
+
+
 def _ssm_parallel_prefill_case(rows):
     """Stacked-SSM parallel-form prefill driven through the Pallas joint
     path: one decode_chunk with the default parallel SSD chunk
@@ -171,6 +215,9 @@ def run(smoke: bool = False):
 
     # stacked joint pack driven through a scan — the serving layout
     _stacked_case(rows)
+
+    # grouped (layer x expert) pack — the MoE serving layout
+    _grouped_case(rows)
 
     # parallel-form SSM prefill through the stacked Pallas path
     _ssm_parallel_prefill_case(rows)

@@ -11,6 +11,12 @@ at most ``TARGET_RATIO`` (0.55x) of the dense-mode weight bytes — the
 overhead and the (mode-independent) dense unembedding. A violation
 raises: this is the CI guard that the serving graph actually changed.
 
+The MoE case (mixtral) additionally guards the EXPERT stacks on the
+fixed accounting: the per-expert einsum weights (rank-3 ``edf`` rhs,
+silently zero in the walker before the provenance fix) must contribute
+nonzero dense bytes, and the grouped packed tables must move <=
+``TARGET_RATIO`` of those dense expert bytes.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
         [--out BENCH_serve.json]
 
@@ -27,6 +33,7 @@ import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_params
@@ -37,7 +44,10 @@ from .common import emit
 
 TARGET_RATIO = 0.55
 VALUE_SPARSITY = 0.5
-ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
+ARCHS = ("tinyllama-1.1b", "mamba2-1.3b", "mixtral-8x7b")
+#: CI subset: one dense arch + the MoE arch — the grouped-expert pack and
+#: the (fixed) rank-3 expert weight accounting are both CI guards.
+SMOKE_ARCHS = ("tinyllama-1.1b", "mixtral-8x7b")
 
 
 def bench_cfg(arch: str, dtype: str = "bfloat16"):
@@ -77,12 +87,47 @@ def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
                            "bytes — the cost walker is broken")
     ratio = joint_wb / dense_wb
 
-    # eligible-projection view: packed artifact vs its dense bf16 footprint
+    # eligible-projection view: packed artifact vs its dense bf16
+    # footprint. Leading axes of w_blocks before (NT, MAXB, bk, bn) are
+    # the layer axis (stacked) or layer x expert (grouped MoE packs).
     eligible_dense = sum(
-        2 * int(t["w_blocks"].shape[0]) * k * n      # L layers x K x N bf16
+        2 * int(np.prod(t["w_blocks"].shape[:-4])) * k * n
         for name, t in tables.arrays.items()
         for k, n in [tables.static[name][:2]])
     packed = _packed_bytes(tables)
+
+    # MoE: the per-expert einsum weights were the silently-zero term of
+    # the cost walker — guard their accounting and their packed saving
+    # separately from the blended ratio. A decode step reads every
+    # layer's packed expert tables once (scan xs), so packed traffic per
+    # step equals stored bytes.
+    expert = {}
+    if cfg.n_experts:
+        moe_names = [n for n in tables.arrays if n.startswith("moe/")]
+        dense_expert = sum(
+            2 * int(np.prod(tables.arrays[n]["w_blocks"].shape[:-4]))
+            * k * nn for n in moe_names
+            for k, nn in [tables.static[n][:2]])
+        packed_expert = sum(int(a.size * a.dtype.itemsize)
+                            for n in moe_names
+                            for a in tables.arrays[n].values())
+        if not dense_expert:
+            raise RuntimeError(f"{arch}: dense expert weight bytes are "
+                               "zero — the MoE projections never packed")
+        if dense_wb <= dense_expert:
+            raise RuntimeError(
+                f"{arch}: dense decode charged {int(dense_wb)} weight "
+                f"bytes, not more than the {dense_expert} the expert "
+                f"stacks alone must contribute — the rank-3 einsum "
+                f"weight accounting regressed to zero")
+        expert_ratio = packed_expert / dense_expert
+        expert = {"dense_expert_weight_bytes_per_step": int(dense_expert),
+                  "packed_expert_weight_bytes_per_step": int(packed_expert),
+                  "expert_ratio": expert_ratio}
+        if expert_ratio > TARGET_RATIO:
+            raise RuntimeError(
+                f"{arch}: packed expert weight traffic {expert_ratio:.3f}x "
+                f"of dense expert bytes > {TARGET_RATIO}")
 
     # --- numeric check at f32: joint decode == dense FTA reference ------
     cfg32 = bench_cfg(arch, dtype="float32")
@@ -112,21 +157,26 @@ def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
         "logit_scale": scale,
         "target_ratio": TARGET_RATIO,
         "pass": ratio <= TARGET_RATIO,
+        **expert,
     }
 
 
 def run(smoke: bool = False, out: str = "BENCH_serve.json"):
-    archs = ARCHS[:1] if smoke else ARCHS
+    archs = SMOKE_ARCHS if smoke else ARCHS
     rows, records = [], {}
     for arch in archs:
         r = bench_arch(arch)
         records[r["arch"]] = r
+        extra = (f" experts={r['expert_ratio']:.3f}x "
+                 f"(dense_expert={r['dense_expert_weight_bytes_per_step']})"
+                 if "expert_ratio" in r else "")
         rows.append((f"serve.weight_bytes.{r['arch']}", 0.0,
                      f"dense={r['dense_weight_bytes_per_step']} "
                      f"joint={r['joint_weight_bytes_per_step']} "
                      f"({r['ratio']:.3f}x, target<={TARGET_RATIO}) "
                      f"eligible={r['eligible_ratio']:.3f}x "
-                     f"max_diff={r['max_abs_diff_vs_fta_reference']:.1e}"))
+                     f"max_diff={r['max_abs_diff_vs_fta_reference']:.1e}"
+                     f"{extra}"))
     emit(rows)
     payload = {"value_sparsity": VALUE_SPARSITY,
                "target_ratio": TARGET_RATIO,
@@ -148,7 +198,7 @@ def run(smoke: bool = False, out: str = "BENCH_serve.json"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="first arch only — the CI serve-path guard")
+                    help="dense + MoE archs only — the CI serve-path guard")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")

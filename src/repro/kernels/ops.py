@@ -330,6 +330,82 @@ def pack_joint_sparse_stacked(w_stack, masks=None, *, bk: int = BK,
         K, N, Kp)
 
 
+class JointPackedGrouped(NamedTuple):
+    """Joint artifact for a GROUPED projection family: all L layers x E
+    group members (MoE experts) of one projection, packed with ONE shared
+    MAXB over every (layer, member) pair. The leading layer axis rides a
+    ``lax.scan`` exactly like JointPackedStacked; the second (group) axis
+    is sliced by the per-expert dispatch loop inside the scan body.
+
+    ``w_blocks`` (L, E, NT, MAXB, bk, bn) int8|bf16 / ``idx`` (L, E, NT,
+    MAXB) int32 / ``scales`` (L, E, 1, N_pad) f32 / ``nblocks`` (L, E,
+    NT) int32. ``k``/``n``/``k_pad`` are shared static dims.
+    """
+    w_blocks: jnp.ndarray
+    idx: jnp.ndarray
+    scales: jnp.ndarray
+    nblocks: jnp.ndarray
+    k: int
+    n: int
+    k_pad: int
+
+    @property
+    def maxb(self) -> int:
+        return self.w_blocks.shape[3]
+
+
+def pack_joint_sparse_grouped(w_group, masks=None, *, bk: int = BK,
+                              bn: int = BN, value_sparsity: float = None,
+                              fta_project: bool = True,
+                              payload: str = "int8",
+                              ) -> JointPackedGrouped:
+    """Group-uniform joint compilation of (L, E, K, N) expert weights.
+
+    The grouped pack is the stacked pack over the FLATTENED (L * E) axis
+    — column-balanced tile pruning (``tile_prune_mask_balanced``) per
+    (layer, expert) slice, per-filter INT8/FTA quantization, compaction —
+    with the shared MAXB taken over every layer of every expert, then the
+    (L, E) axes restored. Balanced self-pruning keeps every expert's
+    survivor count identical per N-column, so MAXB == ``kt - round(vs *
+    kt)`` with ZERO padded slots anywhere in the group; explicit ragged
+    ``masks`` (L, E, K, N) pad short members with zero-payload slots.
+    payload "bf16" is the value-only layout, exactly as in the stacked
+    pack.
+    """
+    w_group = np.asarray(w_group, np.float32)
+    if w_group.ndim != 4 or not (w_group.shape[0] and w_group.shape[1]):
+        raise ValueError(f"w_group must be (L, E, K, N), "
+                         f"got {w_group.shape}")
+    L, E, K, N = w_group.shape
+    flat_masks = None
+    if masks is not None:
+        flat_masks = np.asarray(masks, np.int32).reshape(L * E, K, N)
+    flat = pack_joint_sparse_stacked(
+        w_group.reshape(L * E, K, N), flat_masks, bk=bk, bn=bn,
+        value_sparsity=value_sparsity, fta_project=fta_project,
+        payload=payload)
+    regroup = lambda a: a.reshape((L, E) + a.shape[1:])
+    return JointPackedGrouped(
+        regroup(flat.w_blocks), regroup(flat.idx), regroup(flat.scales),
+        regroup(flat.nblocks), flat.k, flat.n, flat.k_pad)
+
+
+def slice_joint_grouped(packed: JointPackedGrouped, l: int,
+                        e: int) -> JointPacked:
+    """Expert e of layer l as a per-projection JointPacked view."""
+    return JointPacked(packed.w_blocks[l, e], packed.idx[l, e],
+                       packed.scales[l, e], packed.nblocks[l, e],
+                       packed.k, packed.n, packed.k_pad)
+
+
+def unpack_joint_sparse_grouped(packed: JointPackedGrouped) -> np.ndarray:
+    """Invert pack_joint_sparse_grouped -> dense fp32 (L, E, K, N)."""
+    L, E = packed.w_blocks.shape[:2]
+    return np.stack([
+        np.stack([unpack_joint_sparse(slice_joint_grouped(packed, l, e))
+                  for e in range(E)]) for l in range(L)])
+
+
 def slice_joint_stacked(packed: JointPackedStacked, l: int) -> JointPacked:
     """Layer l's view of a stacked pack (the scan body does the same
     slicing implicitly through its xs)."""

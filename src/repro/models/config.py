@@ -105,13 +105,17 @@ class ModelConfig:
     def supports_stacked_tables(self) -> bool:
         """Families whose serving forwards are ONE homogeneous layer scan
         — the ones the stacked joint-sparse tables can ride end-to-end.
-        Hybrid periods, enc-dec stacks, and MoE blocks mix sublayer kinds
-        inside a scan step (ROADMAP items). Single source of truth for
-        build_stacked_tables and the forward/decode guards."""
+        MoE blocks qualify too: the expert stack is homogeneous per layer
+        ((E, K, N) per projection), so a grouped pack
+        (kernels.ops.pack_joint_sparse_grouped) rides the same scan with
+        a per-expert dispatch loop inside the body. Hybrid periods and
+        enc-dec stacks still mix sublayer kinds inside a scan step
+        (ROADMAP items). Single source of truth for build_stacked_tables
+        and the forward/decode guards."""
         if self.family == "ssm":
             return True
-        return bool(self.n_heads) and not self.n_experts \
-            and not self.is_encdec and self.family != "hybrid"
+        return bool(self.n_heads) and not self.is_encdec \
+            and self.family != "hybrid"
 
     @property
     def supports_chunked_prefill(self) -> bool:
@@ -119,12 +123,15 @@ class ModelConfig:
         bit-identical to sequential decode steps: the homogeneous
         dense-attention and SSM scans. Sliding-window ring buffers
         overwrite slots within a chunk; MoE capacity dispatch makes the
-        token pool competing for expert slots part of the math; hybrid /
-        enc-dec mix sublayer kinds. Those fall back to stepwise prefill
-        (serving.prefill)."""
+        token pool competing for expert slots part of the math (a C-token
+        chunk would route against a different capacity than C decode
+        steps), so MoE stays stepwise even though it serves through the
+        stacked tables; hybrid / enc-dec mix sublayer kinds. Those fall
+        back to stepwise prefill (serving.prefill)."""
         if self.family == "ssm":
             return True
-        return self.supports_stacked_tables and self.window == 0
+        return self.supports_stacked_tables and self.window == 0 \
+            and not self.n_experts
 
     @property
     def supports_parallel_prefill(self) -> bool:

@@ -56,12 +56,14 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
     tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
     joint-sparse projection packs whose arrays ride the layer scan as xs
     (next to the per-layer cache slices), so every decode-step projection
-    runs the DB-PIM kernel. Supported for the dense-attention and SSM
-    family scans; None keeps the plain matmuls.
+    runs the DB-PIM kernel. Supported for the dense-attention (incl. MoE:
+    grouped expert packs dispatch one kernel call per expert slice) and
+    SSM family scans; None keeps the plain matmuls.
     """
     if tables is not None and not cfg.supports_stacked_tables:
         raise ValueError(f"stacked kernel tables are not supported for "
-                         f"{cfg.name} (mixed-sublayer or MoE scan)")
+                         f"{cfg.name} (mixed-sublayer hybrid/enc-dec "
+                         f"scan)")
 
     def layer_mm(slices):
         return tables.dense_fn(slices) if tables is not None else None
@@ -154,7 +156,8 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
             h = h + y
             hn2 = apply_norm(p["norm2"], h, cfg)
             if cfg.n_experts:
-                y2, _ = moe_mod.apply_moe_block(p["moe"], hn2, cfg)
+                y2, _ = moe_mod.apply_moe_block(p["moe"], hn2, cfg,
+                                                dense_fn=mm)
             else:
                 y2 = apply_mlp(p["mlp"], hn2, cfg, dense_fn=mm)
             return h + y2, (ck, cv)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import apply_mlp, dtype_of, init_mlp
-from repro.runtime.act_sharding import constrain, constrain_any
+from repro.runtime.act_sharding import constrain_any
 
 
 def init_moe(cfg: ModelConfig, key):
@@ -42,23 +42,25 @@ def init_moe(cfg: ModelConfig, key):
 
 
 def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Per-expert token slots. Rounded up to a multiple of 8 (sublane
+    alignment) but never beyond the total assignment count: an expert can
+    receive at most every (token, choice) pair, so a tiny decode batch
+    (n_tokens * top_k < 8) allocates exactly that many slots instead of 8
+    phantom ones per expert."""
+    assignments = n_tokens * cfg.top_k
     c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
-    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+    return min(max(8, -(-c // 8) * 8), assignments)
 
 
-def _expert_ffn(p, xin, cfg: ModelConfig):
-    """xin (E, C, D) -> (E, C, D), per-expert MLP via batched einsum."""
-    if cfg.mlp_type in ("swiglu", "geglu"):
-        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
-            (lambda v: jax.nn.gelu(v, approximate=True))
-        g = act(constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"]),
-                          "tp", None, None))
-        h = g * constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]),
-                          "tp", None, None)
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]),
-                        approximate=True)
-    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+def _expert_matmul(w, x, name, expert_fn=None):
+    """Per-expert contraction x (..., E, C, K) @ w (E, K, F) ->
+    (..., E, C, F). ``expert_fn`` (sparse_linear.StackedKernelTables
+    dense_fn().expert) reroutes it through one joint-kernel call per
+    packed expert slice — the DB-PIM serving path for grouped expert
+    stacks."""
+    if expert_fn is not None:
+        return expert_fn(w, x, name)
+    return jnp.einsum("...eck,ekf->...ecf", x, w)
 
 
 def _group_dispatch(xt, gate_idx, gate_vals, E: int, C: int):
@@ -94,13 +96,15 @@ def _group_combine(out_ec, slot, w, Tg: int):
     return jnp.einsum("tkd,tk->td", gathered, w.astype(out_ec.dtype))
 
 
-def apply_moe(p, x, cfg: ModelConfig):
+def apply_moe(p, x, cfg: ModelConfig, expert_fn=None):
     """x (B, S, D) -> (B, S, D), plus aux losses dict.
 
     Grouped dispatch: tokens are split into G = B groups (sequences) with
     per-group capacity; dispatch/combine are vmapped so every scatter/
     gather is local to a data shard. Expert compute runs as one batched
-    einsum over (G, E, C, D) with the FFN dim tensor-parallel.
+    einsum over (G, E, C, D) with the FFN dim tensor-parallel — or, when
+    ``expert_fn`` is hooked (stacked joint-sparse serving), as one
+    DB-PIM kernel call per packed expert slice.
     """
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.top_k
@@ -128,7 +132,7 @@ def apply_moe(p, x, cfg: ModelConfig):
     xin = constrain_any(xin, ("dp", "tp", None, None),
                         ("dp", None, None, None))          # (G, E, C, D)
 
-    out = _expert_ffn_grouped(p, xin, cfg)                 # (G, E, C, D)
+    out = _expert_ffn_grouped(p, xin, cfg, expert_fn)      # (G, E, C, D)
     out = constrain_any(out, ("dp", "tp", None, None),
                         ("dp", None, None, None))
 
@@ -144,25 +148,33 @@ def apply_moe(p, x, cfg: ModelConfig):
     return yg.reshape(B, S, D), aux
 
 
-def _expert_ffn_grouped(p, xin, cfg: ModelConfig):
+def _expert_ffn_grouped(p, xin, cfg: ModelConfig, expert_fn=None):
     """xin (G, E, C, D) -> (G, E, C, D); experts sharded over `model`
     when E divides it, otherwise the FFN dim is tensor-parallel."""
+    mm = lambda w, x, name: _expert_matmul(w, x, name, expert_fn)
     cst = lambda t: constrain_any(t, ("dp", "tp", None, None),
                                   ("dp", None, None, "tp"))
     if cfg.mlp_type in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
             (lambda v: jax.nn.gelu(v, approximate=True))
-        g = act(cst(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])))
-        h = g * cst(jnp.einsum("gecd,edf->gecf", xin, p["w_up"]))
+        g = act(cst(mm(p["w_gate"], xin, "moe/w_gate")))
+        h = g * cst(mm(p["w_up"], xin, "moe/w_up"))
     else:
-        h = jax.nn.gelu(cst(jnp.einsum("gecd,edf->gecf", xin, p["w_up"])),
+        h = jax.nn.gelu(cst(mm(p["w_up"], xin, "moe/w_up")),
                         approximate=True)
-    return jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    return mm(p["w_down"], h, "moe/w_down")
 
 
 def apply_moe_block(p, x, cfg: ModelConfig, dense_fn=None):
-    """MoE (+ optional arctic dense residual MLP in parallel)."""
-    y, aux = apply_moe(p, x, cfg)
+    """MoE (+ optional arctic dense residual MLP in parallel).
+
+    ``dense_fn`` is the per-layer DB-PIM hook
+    (StackedKernelTables.dense_fn(slices) on the serving path): its
+    ``expert`` attribute serves the grouped expert projections through
+    the joint kernel, and the hook itself serves the arctic dense
+    residual MLP. Plain None keeps every matmul dense."""
+    y, aux = apply_moe(p, x, cfg,
+                       expert_fn=getattr(dense_fn, "expert", None))
     if cfg.dense_residual:
         y = y + apply_mlp(p["dense_mlp"], x, cfg, dense_fn)
     return y, aux

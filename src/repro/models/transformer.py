@@ -132,7 +132,7 @@ def _dense_block_fwd(p, x, cfg: ModelConfig, positions, mm=None):
                                cfg, positions, dense_fn=mm)
     hn = apply_norm(p["norm2"], h, cfg)
     if cfg.n_experts:
-        y, _aux = moe_mod.apply_moe_block(p["moe"], hn, cfg)
+        y, _aux = moe_mod.apply_moe_block(p["moe"], hn, cfg, dense_fn=mm)
     else:
         y = apply_mlp(p["mlp"], hn, cfg, dense_fn=mm)
     return h + y
@@ -226,7 +226,8 @@ def forward(params, tokens, cfg: ModelConfig,
     unembedding all 32k positions would dominate prefill compute/memory.
     tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
     joint-sparse projections that ride the layer scan as xs, so the
-    DB-PIM kernel serves every layer (dense / SSM families).
+    DB-PIM kernel serves every layer (dense / MoE / SSM families; MoE
+    expert stacks dispatch per packed expert slice).
     """
     B, S = tokens.shape
     x = embed_tokens(params["embed"], tokens, cfg)
@@ -242,8 +243,8 @@ def forward(params, tokens, cfg: ModelConfig,
 
     if tables is not None and not cfg.supports_stacked_tables:
         raise ValueError(f"stacked kernel tables are not supported for the "
-                         f"{cfg.family} family yet (mixed-sublayer or MoE "
-                         f"scans)")
+                         f"{cfg.family} family yet (mixed-sublayer "
+                         f"hybrid/enc-dec scans)")
 
     if cfg.family == "ssm":
         body = lambda p, h, mm: _ssm_block_fwd(p, h, cfg, mm)

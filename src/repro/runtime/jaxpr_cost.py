@@ -15,12 +15,26 @@ result. This is an estimate — it cannot see XLA's actual fusion — but it
 is trip-correct, which dominates the error.
 
 WEIGHT traffic (`weight_bytes`): the decode roofline term the DB-PIM
-serving path attacks. Heuristics, documented because they are heuristics:
-  * dot_general: the rhs operand when it is rank-2 with no batch dims —
-    every projection in this codebase is `x @ W` with a 2D weight, while
-    attention/SSM einsums carry batch dims or higher rank. Charged
-    through `convert_src`, so an int8 weight dequantized in-graph
-    charges 1 B/element.
+serving path attacks. Three rules, in precedence order per operand:
+  * PROVENANCE (the exact rule): `analyze(fn, params, ...)` tags every
+    leaf of the argument(s) named by `weight_argnums` (default: arg 0,
+    the params pytree at every call site in this repo) and propagates
+    the tag through structural ops (convert/reshape/transpose/slice/
+    broadcast) and into scan/cond/pjit/remat bodies by positional invar
+    mapping. A dot_general operand that still carries the tag is a
+    stored-parameter read and charges its full bytes — REGARDLESS of
+    rank or batch dims. This is what counts the MoE per-expert einsum
+    (`ecd,edf->ecf` — the rank-3 `edf` weight lowers with a batch dim,
+    and jnp.einsum may even place it as the LHS operand) and any other
+    stacked rank-3+ parameter read, while leaving attention/SSM
+    activation einsums (operands PRODUCED in-graph: conv outputs,
+    updated KV caches, softmax probs) uncharged even though some share
+    the (rank-3, one-batch-dim) shape signature.
+  * dot_general shape fallback: the rhs operand when it is rank-2 with
+    no batch dims — `x @ W` projections whose weight lost its tag to a
+    non-structural op (e.g. the in-graph int8 dequant multiply).
+    Charged through `convert_src`, so an int8 weight dequantized
+    in-graph charges 1 B/element.
   * pallas_call: every operand that is NOT a plain rank-2 float
     activation — i.e. integer payloads/index tables (int8 w_blocks,
     int32 idx) plus rank-2 floats with a leading broadcast dim of 1
@@ -30,7 +44,7 @@ serving path attacks. Heuristics, documented because they are heuristics:
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -72,6 +86,27 @@ def _dot_flops(eqn) -> int:
 _SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
                     "body_jaxpr")
 
+#: ops that read a stored array without computing on it — a tagged
+#: (parameter-provenance) input keeps its tag through these. Anything
+#: else (adds, muls, scatters, ...) produces a NEW array and drops it.
+_STRUCTURAL = ("convert_element_type", "reshape", "transpose", "squeeze",
+               "expand_dims", "slice", "dynamic_slice", "rev",
+               "broadcast_in_dim", "sharding_constraint", "copy")
+
+
+def _is_var(v) -> bool:
+    return isinstance(v, jcore.Var)
+
+
+def _map_tags(outer_invars, inner_invars, tagged):
+    """Positional outer->inner tag mapping for sub-jaxpr recursion (scan
+    consts+carry+xs, pjit/remat bodies). A count mismatch (e.g. while's
+    cond consts) drops the tags — undercounting is the safe failure."""
+    if len(outer_invars) != len(inner_invars):
+        return set()
+    return {iv for ov, iv in zip(outer_invars, inner_invars)
+            if _is_var(ov) and ov in tagged}
+
 
 def _is_pallas_weight(aval) -> bool:
     """Weight-operand heuristic for pallas_call (see module docstring):
@@ -96,13 +131,23 @@ def _is_pallas_weight(aval) -> bool:
 
 
 def _walk(jaxpr, mult: int, acc: Dict[str, float],
-          convert_src: Dict[Any, Any] = None):
+          convert_src: Dict[Any, Any] = None, weight_vars=None):
     # convert_src: var -> pre-convert var, so a dot whose operand is a
     # freshly dequantized int8 weight charges int8 bytes (the dequant
     # fuses into the matmul on TPU; HBM sees the int8 tensor).
+    # weight_vars: vars with parameter provenance (see module docstring);
+    # grown in place as structural ops pass the tag along.
     convert_src = {} if convert_src is None else convert_src
+    weight_vars = set() if weight_vars is None else weight_vars
+
+    def tagged(v):
+        return _is_var(v) and (v in weight_vars
+                               or convert_src.get(v, v) in weight_vars)
+
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
+        if prim in _STRUCTURAL and eqn.invars and tagged(eqn.invars[0]):
+            weight_vars.add(eqn.outvars[0])
         if prim == "convert_element_type" and len(eqn.invars) == 1:
             convert_src[eqn.outvars[0]] = eqn.invars[0]
             continue          # dtype converts fuse; no HBM traffic charged
@@ -112,15 +157,26 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
             acc["flops"] += f
             op_bytes = 0
             for v in eqn.invars:
-                src = convert_src.get(v, v)
+                src = convert_src.get(v, v) if _is_var(v) else v
                 op_bytes += _bytes(src.aval)
             acc["bytes"] += (op_bytes
                              + _bytes(eqn.outvars[0].aval)) * mult
-            # projection weight traffic: rank-2 rhs with no batch dims
-            # (x @ W); attention/SSM einsum dots have batch dims or rank>2
+            # weight traffic, per operand (charged once each):
+            #   1. parameter provenance — exact, any rank (MoE expert
+            #      einsums place the rank-3 weight on either side);
+            #   2. rank-2 no-batch rhs — the x @ W shape fallback for
+            #      weights whose tag died (in-graph int8 dequant).
+            charged = [False, False]
+            for i, v in enumerate(eqn.invars):
+                if tagged(v):
+                    src = convert_src.get(v, v)
+                    acc["weight_bytes"] += _bytes(src.aval) * mult
+                    charged[i] = True
             _, (_, rb) = eqn.params["dimension_numbers"]
-            rhs = convert_src.get(eqn.invars[1], eqn.invars[1])
-            if len(getattr(rhs.aval, "shape", ())) == 2 and not rb:
+            rhs_v = eqn.invars[1]
+            rhs = convert_src.get(rhs_v, rhs_v) if _is_var(rhs_v) else rhs_v
+            if (not charged[1]
+                    and len(getattr(rhs.aval, "shape", ())) == 2 and not rb):
                 acc["weight_bytes"] += _bytes(rhs.aval) * mult
             continue
         if prim == "pallas_call":
@@ -161,7 +217,12 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
         if prim == "scan":
             length = int(eqn.params.get("length", 1))
             inner = eqn.params["jaxpr"]
-            _walk(inner.jaxpr, mult * length, acc)
+            # scan invars are [consts, carry, xs] and map 1:1 onto the
+            # body's invars — a tagged stacked weight carried as xs keeps
+            # its tag on the per-iteration slice.
+            _walk(inner.jaxpr, mult * length, acc,
+                  weight_vars=_map_tags(eqn.invars, inner.jaxpr.invars,
+                                        weight_vars))
             continue
         if prim == "while":
             # unbounded a priori; models don't use raw while. Count once.
@@ -169,11 +230,12 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
             continue
         if prim == "cond":
             branches = eqn.params.get("branches", ())
-            sub = [dict(acc) for _ in branches]
             best = None
             for br in branches:
                 a = {k: 0.0 for k in acc}
-                _walk(br.jaxpr, mult, a)
+                _walk(br.jaxpr, mult, a,
+                      weight_vars=_map_tags(eqn.invars[1:], br.jaxpr.invars,
+                                            weight_vars))
                 if best is None or a["flops"] > best["flops"]:
                     best = a
             if best:
@@ -184,7 +246,10 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
         for pname in _SUBJAXPR_PARAMS:
             if pname in eqn.params:
                 sub = eqn.params[pname]
-                _walk(getattr(sub, "jaxpr", sub), mult, acc)
+                inner = getattr(sub, "jaxpr", sub)
+                _walk(inner, mult, acc,
+                      weight_vars=_map_tags(eqn.invars, inner.invars,
+                                            weight_vars))
                 handled = True
                 break
         if handled:
@@ -203,12 +268,26 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                                          for v in eqn.invars)) * mult
 
 
-def analyze(fn, *args) -> Dict[str, float]:
-    """Trip-aware cost of `fn(*args)` (args may be ShapeDtypeStructs)."""
+def analyze(fn, *args, weight_argnums: Tuple[int, ...] = (0,)
+            ) -> Dict[str, float]:
+    """Trip-aware cost of `fn(*args)` (args may be ShapeDtypeStructs).
+
+    weight_argnums: which positional args hold stored parameters — their
+    leaves seed the provenance tags behind the exact weight_bytes rule
+    (module docstring). Every call site in this repo passes params first,
+    so the default (0,) is right; pass () to fall back to the pure shape
+    heuristics (e.g. when arg 0 is an activation)."""
     closed = jax.make_jaxpr(fn)(*args)
     acc = {"flops": 0.0, "dot_flops": 0.0, "bytes": 0.0,
            "pallas_flops": 0.0, "pallas_bytes": 0.0, "weight_bytes": 0.0}
-    _walk(closed.jaxpr, 1, acc)
+    tags = set()
+    leaf_counts = [len(jax.tree_util.tree_leaves(a)) for a in args]
+    if sum(leaf_counts) == len(closed.jaxpr.invars):
+        offsets = np.concatenate([[0], np.cumsum(leaf_counts)])
+        for i in weight_argnums:
+            if 0 <= i < len(args):
+                tags.update(closed.jaxpr.invars[offsets[i]:offsets[i + 1]])
+    _walk(closed.jaxpr, 1, acc, weight_vars=tags)
     # argument + result residency: params/opt-state are read and written
     # once per step regardless of op-level traffic.
     arg_bytes = sum(_bytes(v.aval) for v in closed.jaxpr.invars)

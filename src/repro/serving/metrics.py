@@ -11,6 +11,7 @@ Two clocks, kept separate on purpose:
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -102,14 +103,31 @@ class MetricsRecorder:
 
     # -- summaries ---------------------------------------------------------
     def summary(self) -> dict:
-        done = [r for r in self.requests.values()
-                if r.first_token_tick is not None]
-        ttfts = sorted(r.ttft_ticks for r in done)
+        """Aggregate serving metrics.
+
+        TTFT aggregates are computed over requests that REACHED a first
+        token only — requests still queued/prefilling at shutdown have no
+        TTFT yet, and folding a placeholder in would bias the mean.
+        Instead of dropping them silently they are counted explicitly:
+        ``ttft_n`` requests contributed, ``n_no_first_token`` did not
+        (``ttft_n + n_no_first_token == n_requests`` always). All TTFT
+        fields are None when nothing reached a first token (the
+        all-queued-at-shutdown edge), never a crash. Percentiles are
+        nearest-rank (ceil(q*n)-1), so p95 of 20 samples is the 19th
+        value, not the max. ``prefill_steps_per_request_mean`` averages
+        over every ADMITTED request — half-prefilled requests did real
+        device work and dropping them would understate prefill cost.
+        """
+        with_ft = [r for r in self.requests.values()
+                   if r.first_token_tick is not None]
+        ttfts = sorted(r.ttft_ticks for r in with_ft)
+        admitted = [r for r in self.requests.values()
+                    if r.admitted_tick is not None]
 
         def pct(xs, q):
             if not xs:
                 return None
-            return xs[min(len(xs) - 1, int(q * len(xs)))]
+            return xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))]
 
         toks = self.generated_tokens
         calls = max(self.device_calls, 1)
@@ -118,6 +136,8 @@ class MetricsRecorder:
             "n_requests": len(self.requests),
             "n_completed": sum(r.done_tick is not None
                                for r in self.requests.values()),
+            "ttft_n": len(ttfts),
+            "n_no_first_token": len(self.requests) - len(ttfts),
             "generated_tokens": toks,
             "engine_ticks": len(self.ticks),
             "device_calls": self.device_calls,
@@ -129,8 +149,8 @@ class MetricsRecorder:
             "ttft_ticks_p50": pct(ttfts, 0.50),
             "ttft_ticks_p95": pct(ttfts, 0.95),
             "prefill_steps_per_request_mean": (
-                sum(r.prefill_steps for r in done) / len(done)
-                if done else None),
+                sum(r.prefill_steps for r in admitted) / len(admitted)
+                if admitted else None),
             "queue_depth_mean": (sum(qd) / len(qd)) if qd else 0.0,
             "queue_depth_max": max(qd) if qd else 0,
             "wall_s": self._wall,

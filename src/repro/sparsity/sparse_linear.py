@@ -270,7 +270,11 @@ class StackedKernelTables:
     ``arrays`` is a pytree of stacked jnp arrays (leading axis = layer) —
     pass it as scan xs next to the stacked params. ``static`` holds the
     per-projection (k, n, k_pad) logical dims the per-layer JointPacked
-    view needs (scan cannot carry python ints).
+    view needs (scan cannot carry python ints). Grouped (MoE expert)
+    entries — keys ``moe/*`` — carry a second leading axis E after the
+    layer axis; the per-expert dispatch is the ``expert`` attribute of
+    the dense_fn hook (models.moe routes its batched expert einsums
+    through it).
     """
     arrays: Dict[str, Dict[str, jnp.ndarray]]
     static: Dict[str, Tuple[int, int, int]]
@@ -278,32 +282,66 @@ class StackedKernelTables:
 
     def dense_fn(self, slices):
         """Build the dense_fn(w, x, name) hook from one layer's slices
-        (the per-iteration xs the scan body receives)."""
+        (the per-iteration xs the scan body receives). The returned hook
+        carries the grouped per-expert variant as ``mm.expert`` —
+        ``expert(w, x, name)`` computes the batched expert contraction
+        ``x[..., e, :, :] @ w[e]`` for every expert through the joint
+        kernel (one ``joint_dense`` call per packed expert slice) when
+        ``name`` is packed, and falls back to the plain einsum
+        otherwise."""
         from repro.kernels import ops
+
+        def _packed(t, name, e=None):
+            k, n, k_pad = self.static[name]
+            a = (t if e is None
+                 else {key: arr[e] for key, arr in t.items()})
+            return ops.JointPacked(a["w_blocks"], a["idx"], a["scales"],
+                                   a["nblocks"], k, n, k_pad)
 
         def mm(w, x, name):
             t = None if slices is None else slices.get(name)
             if t is None:
                 return x @ w
-            k, n, k_pad = self.static[name]
-            packed = ops.JointPacked(t["w_blocks"], t["idx"], t["scales"],
-                                     t["nblocks"], k, n, k_pad)
-            return ops.joint_dense(x, packed,
+            return ops.joint_dense(x, _packed(t, name),
                                    interpret=self.interpret).astype(x.dtype)
+
+        def expert(w, x, name):
+            """x (..., E, C, D) x w (E, D, F) -> (..., E, C, F)."""
+            t = None if slices is None else slices.get(name)
+            if t is None:
+                return jnp.einsum("...eck,ekf->...ecf", x, w)
+            E = t["w_blocks"].shape[0]
+            outs = [ops.joint_dense(x[..., e, :, :], _packed(t, name, e),
+                                    interpret=self.interpret).astype(x.dtype)
+                    for e in range(E)]
+            return jnp.stack(outs, axis=-3)
+
+        mm.expert = expert
         return mm
 
 
 def _stacked_projections(params, cfg: ModelConfig):
-    """name -> stacked (L, K, N) weight for the families whose serving
-    forwards are a single layer scan (cfg.supports_stacked_tables — the
-    shared predicate the forward/decode guards also use)."""
+    """name -> stacked weight for the families whose serving forwards are
+    a single layer scan (cfg.supports_stacked_tables — the shared
+    predicate the forward/decode guards also use). Rank-3 (L, K, N)
+    entries pack per-layer; rank-4 ``moe/*`` entries (L, E, K, N) pack
+    grouped across the expert axis too. Routers stay dense (same
+    reasoning as the paper's dw-conv exclusion: tiny, accuracy-critical).
+    """
     if not cfg.supports_stacked_tables or "blocks" not in params:
         return None
     if cfg.family == "ssm":
         b = params["blocks"]["ssm"]
         return {"in_proj": b["in_proj"], "out_proj": b["out_proj"]}
     out = {k: params["blocks"]["attn"][k] for k in ("wq", "wk", "wv", "wo")}
-    out.update(params["blocks"]["mlp"])
+    if cfg.n_experts:
+        moe = params["blocks"]["moe"]
+        out.update({f"moe/{k}": moe[k]
+                    for k in ("w_gate", "w_up", "w_down") if k in moe})
+        if cfg.dense_residual:
+            out.update(moe["dense_mlp"])
+    else:
+        out.update(params["blocks"]["mlp"])
     return out
 
 
@@ -350,11 +388,12 @@ def build_stacked_tables(params, cfg: ModelConfig,
     for name, w in projections.items():
         w = np.asarray(w, np.float32)
         _round8 = lambda d: max(8, 8 * (-(-d // 8)))
-        bk_eff = bk if bk is not None else min(ops.BK, _round8(w.shape[1]))
-        bn_eff = bn if bn is not None else min(ops.BN, _round8(w.shape[2]))
-        packed = ops.pack_joint_sparse_stacked(
-            w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff,
-            payload=payload)
+        bk_eff = bk if bk is not None else min(ops.BK, _round8(w.shape[-2]))
+        bn_eff = bn if bn is not None else min(ops.BN, _round8(w.shape[-1]))
+        pack = (ops.pack_joint_sparse_grouped if w.ndim == 4
+                else ops.pack_joint_sparse_stacked)
+        packed = pack(w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff,
+                      payload=payload)
         arrays[name] = {"w_blocks": packed.w_blocks, "idx": packed.idx,
                        "scales": packed.scales, "nblocks": packed.nblocks}
         static[name] = (packed.k, packed.n, packed.k_pad)
@@ -395,18 +434,26 @@ def reconstruct_stacked_params(params, tables: StackedKernelTables, cfg):
     for name, w in projections.items():
         t = tables.arrays[name]
         k, n, k_pad = tables.static[name]
-        packed = ops.JointPackedStacked(t["w_blocks"], t["idx"],
-                                        t["scales"], t["nblocks"],
-                                        k, n, k_pad)
-        recon[name] = jnp.asarray(
-            ops.unpack_joint_sparse_stacked(packed)).astype(
-                jnp.asarray(w).dtype)
+        if t["w_blocks"].ndim == 6:          # grouped (L, E, ...) experts
+            packed = ops.JointPackedGrouped(t["w_blocks"], t["idx"],
+                                            t["scales"], t["nblocks"],
+                                            k, n, k_pad)
+            dense = ops.unpack_joint_sparse_grouped(packed)
+        else:
+            packed = ops.JointPackedStacked(t["w_blocks"], t["idx"],
+                                            t["scales"], t["nblocks"],
+                                            k, n, k_pad)
+            dense = ops.unpack_joint_sparse_stacked(packed)
+        recon[name] = jnp.asarray(dense).astype(jnp.asarray(w).dtype)
 
     def visit(path, leaf):
         key = _key(path)
-        for name, new in recon.items():
-            if key.endswith("/" + name):
-                return new
+        # longest suffix wins: arctic's "blocks/moe/w_up" matches both
+        # "moe/w_up" (experts) and the dense_mlp bare name "w_up" —
+        # specificity, not dict order, must pick the expert tensor
+        matches = [name for name in recon if key.endswith("/" + name)]
+        if matches:
+            return recon[max(matches, key=len)]
         return leaf
     return jax.tree_util.tree_map_with_path(visit, params)
 

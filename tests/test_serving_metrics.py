@@ -1,0 +1,69 @@
+"""MetricsRecorder.summary() contract: requests that never reach a first
+token are counted explicitly (never silently folded into or dropped from
+the TTFT aggregates), the all-queued-at-shutdown edge cannot crash, and
+percentiles are nearest-rank.
+"""
+
+from repro.serving.metrics import MetricsRecorder
+
+
+def _submit(m, rid, arrival=0):
+    m.on_submit(rid, prompt_len=4, gen_len=2, arrival=arrival)
+
+
+def test_all_queued_at_shutdown_summary_is_explicit_not_a_crash():
+    """Engine shut down with every request still queued: no TTFT exists.
+    summary() must report that state explicitly — None aggregates plus an
+    n_no_first_token count — rather than crashing or averaging over an
+    empty/placeholder population."""
+    m = MetricsRecorder()
+    for rid in range(3):
+        _submit(m, rid)
+    s = m.summary()
+    assert s["n_requests"] == 3
+    assert s["ttft_n"] == 0
+    assert s["n_no_first_token"] == 3
+    assert s["ttft_ticks_mean"] is None
+    assert s["ttft_ticks_p50"] is None
+    assert s["ttft_ticks_p95"] is None
+    assert s["prefill_steps_per_request_mean"] is None
+    assert s["n_completed"] == 0
+
+
+def test_partial_first_tokens_aggregate_over_reached_only():
+    """Mixed population: TTFT aggregates cover exactly the requests that
+    reached a first token; the rest are counted, not imputed. Prefill
+    steps average over every ADMITTED request — half-prefilled requests
+    did real device work."""
+    m = MetricsRecorder()
+    for rid in range(4):
+        _submit(m, rid)
+        m.on_admit(rid, tick=0)
+    # rids 0/1 reach first token at ticks 3 and 5; 2/3 never do, but rid 2
+    # burned 2 prefill steps before shutdown
+    m.on_prefill_step(0)
+    m.on_first_token(0, 3)
+    m.on_prefill_step(1)
+    m.on_first_token(1, 5)
+    m.on_prefill_step(2)
+    m.on_prefill_step(2)
+    s = m.summary()
+    assert s["ttft_n"] == 2 and s["n_no_first_token"] == 2
+    assert s["ttft_ticks_mean"] == 4.0            # (3 + 5) / 2, not /4
+    assert s["ttft_ticks_p50"] == 3
+    assert s["ttft_ticks_p95"] == 5
+    assert s["prefill_steps_per_request_mean"] == 1.0   # 4 steps / 4 admitted
+    assert s["ttft_n"] + s["n_no_first_token"] == s["n_requests"]
+
+
+def test_percentiles_are_nearest_rank():
+    """p95 of 20 samples is the 19th order statistic, not the max; p50 of
+    an odd count is the middle element."""
+    m = MetricsRecorder()
+    for rid in range(20):
+        _submit(m, rid, arrival=0)
+        m.on_first_token(rid, rid + 1)            # ttfts 1..20
+    s = m.summary()
+    assert s["ttft_ticks_p95"] == 19
+    assert s["ttft_ticks_p50"] == 10
+    assert s["ttft_ticks_mean"] == 10.5
