@@ -17,6 +17,12 @@ silently zero in the walker before the provenance fix) must contribute
 nonzero dense bytes, and the grouped packed tables must move <=
 ``TARGET_RATIO`` of those dense expert bytes.
 
+The hybrid (jamba) and enc-dec (whisper) cases guard the segmented
+per-kind scans that closed the family matrix: jamba's mixed attention /
+SSM / MoE sublayer runs pack per segment (seg00..), whisper's decoder —
+cross-attention included — packs while its run-once encoder stays
+dense; both must hit the same <= ``TARGET_RATIO`` decode-step contract.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
         [--out BENCH_serve.json]
 
@@ -37,6 +43,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_params
+from repro.models.transformer import encode
 from repro.runtime.jaxpr_cost import analyze
 from repro.sparsity.sparse_linear import (build_stacked_tables,
                                           reconstruct_stacked_params)
@@ -44,10 +51,14 @@ from .common import emit
 
 TARGET_RATIO = 0.55
 VALUE_SPARSITY = 0.5
-ARCHS = ("tinyllama-1.1b", "mamba2-1.3b", "mixtral-8x7b")
-#: CI subset: one dense arch + the MoE arch — the grouped-expert pack and
-#: the (fixed) rank-3 expert weight accounting are both CI guards.
-SMOKE_ARCHS = ("tinyllama-1.1b", "mixtral-8x7b")
+ARCHS = ("tinyllama-1.1b", "mamba2-1.3b", "mixtral-8x7b",
+         "jamba-v0.1-52b", "whisper-base")
+#: CI subset: one dense arch + the MoE arch (grouped-expert pack and the
+#: fixed rank-3 expert weight accounting) + the two families the
+#: segmented scans brought in — hybrid (per-segment packs, mixed
+#: sublayer kinds) and enc-dec (cross-attention packs, dense encoder).
+SMOKE_ARCHS = ("tinyllama-1.1b", "mixtral-8x7b",
+               "jamba-v0.1-52b", "whisper-base")
 
 
 def bench_cfg(arch: str, dtype: str = "bfloat16"):
@@ -56,7 +67,25 @@ def bench_cfg(arch: str, dtype: str = "bfloat16"):
                      dbpim_value_sparsity=VALUE_SPARSITY)
     if cfg.family == "ssm":
         return cfg.scaled(d_model=256, ssm_state=64, ssm_head_dim=64)
+    if cfg.family == "hybrid":
+        return cfg.scaled(d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                          ssm_state=64, ssm_head_dim=64)
+    if cfg.family == "audio":
+        return cfg.scaled(d_model=256, n_heads=4, n_kv_heads=4, d_ff=512)
     return cfg.scaled(d_model=256, n_heads=4, n_kv_heads=2, d_ff=512)
+
+
+def _enc_out(cfg, params, batch: int):
+    """Whisper: the decode caches carry the encoder output (computed once
+    per request; its weights are deliberately unpacked and NOT part of
+    the per-step traffic contract)."""
+    if not cfg.is_encdec:
+        return None
+    frames = jax.random.normal(jax.random.PRNGKey(7),
+                               (batch, cfg.encoder_seq, cfg.d_model),
+                               dtype=jnp.float32)
+    return encode(params, frames.astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32), cfg)
 
 
 def _packed_bytes(tables) -> int:
@@ -72,7 +101,8 @@ def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
     if tables is None:
         raise RuntimeError(f"{arch}: no stacked joint path — the serving "
                            "integration this bench guards is missing")
-    cache = init_cache(cfg, batch, max_len)
+    cache = init_cache(cfg, batch, max_len, enc_out=_enc_out(cfg, params,
+                                                             batch))
     tok = jnp.ones((batch, 1), jnp.int32)
 
     dense_cost = analyze(
@@ -103,7 +133,10 @@ def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
     # step equals stored bytes.
     expert = {}
     if cfg.n_experts:
-        moe_names = [n for n in tables.arrays if n.startswith("moe/")]
+        # flat-view keys are "moe/w_up" on single-segment stacks and
+        # "segNN/moe/w_up" on hybrid per-segment packs; arctic's dense
+        # residual MLP packs under bare names and stays excluded
+        moe_names = [n for n in tables.arrays if "moe/" in n]
         dense_expert = sum(
             2 * int(np.prod(tables.arrays[n]["w_blocks"].shape[:-4]))
             * k * nn for n in moe_names
@@ -134,7 +167,8 @@ def bench_arch(arch: str, batch: int = 4, max_len: int = 32) -> dict:
     params32 = init_params(cfg32, jax.random.PRNGKey(0))
     tables32 = build_stacked_tables(params32, cfg32)
     recon32 = reconstruct_stacked_params(params32, tables32, cfg32)
-    cache32 = init_cache(cfg32, batch, max_len)
+    cache32 = init_cache(cfg32, batch, max_len,
+                         enc_out=_enc_out(cfg32, params32, batch))
     logits_j, _ = decode_step(params32, cache32, tok, cfg32, tables=tables32)
     logits_r, _ = decode_step(recon32, cache32, tok, cfg32)
     max_diff = float(jnp.max(jnp.abs(logits_j - logits_r)))

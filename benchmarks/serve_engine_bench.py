@@ -45,8 +45,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_test_mesh
-from repro.launch.steps import (build_prefill_chunk_step,
-                                build_slot_decode_step)
+from repro.launch.steps import build_step
 from repro.models import init_cache, init_params
 from repro.models.ssm import PARALLEL_PREFILL_ATOL
 from repro.runtime.jaxpr_cost import analyze_call_kinds
@@ -55,7 +54,11 @@ from repro.sparsity.sparse_linear import (build_stacked_tables,
                                           strip_packed_projections)
 from .common import emit
 
-ARCHS = ("tinyllama-1.1b", "mamba2-1.3b")
+#: arctic is the MoE chunked-prefill case: no sliding window, so the
+#: per-position capacity dispatch (models.moe.apply_moe per_position)
+#: chunk-prefills — guard 1 holds it to generations IDENTICAL to
+#: stepwise prefill, guard 2 to strictly fewer steps-to-first-token.
+ARCHS = ("tinyllama-1.1b", "mamba2-1.3b", "arctic-480b")
 PREFILL_CHUNK = 8
 N_SLOTS = 4
 MAX_LEN = 48
@@ -88,21 +91,22 @@ def _weight_bytes_by_kind(cfg, mesh, params, tables) -> dict:
     """Modeled weight bytes one device call of each engine call kind
     moves through HBM, keyed by the step builders' call_kind tags."""
     cache = _mk_cache(cfg)
-    decode_fn, _ = build_slot_decode_step(cfg, mesh, stacked_tables=tables)
+    decode_fn, _ = build_step(cfg, mesh, "decode", stacked_tables=tables)
     tok1 = jnp.zeros((N_SLOTS, 1), jnp.int32)
     act = jnp.ones((N_SLOTS,), bool)
     tokc = jnp.zeros((N_SLOTS, PREFILL_CHUNK), jnp.int32)
     nv = jnp.full((N_SLOTS,), PREFILL_CHUNK, jnp.int32)
 
     calls = {decode_fn.call_kind: (decode_fn, (params, cache, tok1, act))}
-    if cfg.supports_chunked_prefill:
-        chunk_fn, _ = build_prefill_chunk_step(cfg, mesh,
-                                               stacked_tables=tables)
+    caps = cfg.serving_capabilities()
+    if caps.chunked_prefill:
+        chunk_fn, _ = build_step(cfg, mesh, "prefill_chunk",
+                                 stacked_tables=tables)
         calls[chunk_fn.call_kind] = (chunk_fn, (params, cache, tokc, nv))
-        if cfg.supports_parallel_prefill and not cfg.prefill_exact:
+        if caps.parallel_prefill and not cfg.prefill_exact:
             # the fallback the parallel form is measured against
-            exact_fn, _ = build_prefill_chunk_step(
-                cfg.scaled(prefill_exact=True), mesh, stacked_tables=tables)
+            exact_fn, _ = build_step(cfg.scaled(prefill_exact=True), mesh,
+                                     "prefill_chunk", stacked_tables=tables)
             calls[exact_fn.call_kind] = (exact_fn,
                                          (params, cache, tokc, nv))
     kinds = analyze_call_kinds(calls)

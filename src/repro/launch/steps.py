@@ -107,39 +107,127 @@ def _moment_specs(params, pspecs, moments, mesh):
     return treedef.unflatten(out)
 
 
-def build_serve_step(cfg: ModelConfig, mesh: Mesh,
-                     int8_weights: bool = False, stacked_tables=None):
-    """int8_weights=True: projections live in HBM as INT8 + per-filter
-    scale (the FTA/DB-PIM serving format) and are dequantized in-graph —
-    the dequant fuses into the matmuls, halving decode weight traffic.
+SERVE_CALL_KINDS = ("serve", "decode", "prefill_chunk")
 
-    stacked_tables (sparsity.sparse_linear.StackedKernelTables, from
-    build_stacked_tables(params, cfg)): the uniform-MAXB joint-sparse
-    weight packs ride the decode-step layer scan, so every projection of
-    every layer runs the DB-PIM Pallas kernel — the compiled serving HLO
-    changes (weight traffic (1 - vs) * 0.5 of dense bf16 for joint;
-    (1 - vs) for the bf16-payload value tables). Mutually exclusive with
-    int8_weights (the tables already carry their own payload).
+
+def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
+               stacked_tables=None, int8_weights: bool = False):
+    """One entry point for every fixed-shape serving step. Returns
+    (step_fn, shardings_fn); step_fn carries a ``call_kind`` tag that
+    runtime.jaxpr_cost.analyze_call_kinds and the serving engine consume
+    for per-kind cost attribution.
+
+    call_kind selects the step:
+
+      * "serve" — plain (B, 1) decode step, ``(params, cache, token)``.
+        Tag "decode". int8_weights=True keeps projections in HBM as
+        INT8 + per-filter scale (the FTA/DB-PIM serving format),
+        dequantized in-graph so the dequant fuses into the matmuls —
+        halving decode weight traffic. Mutually exclusive with
+        stacked_tables (the tables carry their own payload).
+      * "decode" — the serving engine's slot decode step,
+        ``(params, cache, token, active)``: inactive slots (free,
+        draining, or mid-prefill while their neighbors decode) compute
+        alongside the batch but their cache writes and position advances
+        are discarded (models.decode.merge_slots) — continuous batching
+        with ZERO per-request recompilation. Positions come from
+        cache["pos"], a (B,) vector of per-slot depths. Tag "decode".
+      * "prefill_chunk" — chunked cache-filling prefill,
+        ``(params, cache, tokens, n_valid)``: C prompt tokens per slot
+        in ONE fixed-shape device call (models.decode.decode_chunk), so
+        time-to-first-token is ceil(P/C) steps instead of P. n_valid (B,)
+        carries each slot's real token count this chunk (0 = slot not
+        prefilling; its cache is untouched). Tag "prefill_parallel" when
+        SSM segments run the parallel SSD chunk form (one read of the
+        stacked in/out projections per chunk;
+        models.ssm.prefill_ssm_parallel), "prefill_chunk_exact" when
+        every segment's chunk math is bit-identical to sequential decode
+        (attention chunks always are; SSM with cfg.prefill_exact).
+
+    stacked_tables (sparsity.sparse_linear.SegmentedKernelTables, from
+    build_stacked_tables(params, cfg)): per-segment uniform-MAXB
+    joint-sparse weight packs riding each segment's layer scan, so every
+    projection of every layer runs the DB-PIM Pallas kernel — the
+    compiled serving HLO changes (weight traffic (1 - vs) * 0.5 of dense
+    bf16 for joint; (1 - vs) for the bf16-payload value tables).
     """
+    if call_kind not in SERVE_CALL_KINDS:
+        raise ValueError(f"call_kind {call_kind!r} not in "
+                         f"{SERVE_CALL_KINDS}")
     if int8_weights and stacked_tables is not None:
         raise ValueError("int8_weights and stacked_tables are mutually "
                          "exclusive serving formats")
+    if int8_weights and call_kind != "serve":
+        raise ValueError("int8_weights is a 'serve' step format")
 
-    def serve_step(params, cache, token):
-        if int8_weights:
-            from repro.sparsity.sparse_linear import \
-                dequant_params_for_serving
-            params = dequant_params_for_serving(params)
-        return decode_step(params, cache, token, cfg,
-                           tables=stacked_tables)
+    if call_kind == "serve":
+        def step_fn(params, cache, token):
+            if int8_weights:
+                from repro.sparsity.sparse_linear import \
+                    dequant_params_for_serving
+                params = dequant_params_for_serving(params)
+            return decode_step(params, cache, token, cfg,
+                               tables=stacked_tables)
+        step_fn.call_kind = "decode"
 
-    def shardings(params, cache, token):
-        pspec = _serving_param_specs(params, mesh)
-        cspec = shr.cache_specs(cache, cfg, mesh)
-        tspec = shr.batch_specs({"token": token}, mesh)["token"]
-        return pspec, cspec, tspec
+        def shardings(params, cache, token):
+            pspec = _serving_param_specs(params, mesh)
+            cspec = shr.cache_specs(cache, cfg, mesh)
+            tspec = shr.batch_specs({"token": token}, mesh)["token"]
+            return pspec, cspec, tspec
 
-    return serve_step, shardings
+    elif call_kind == "decode":
+        def step_fn(params, cache, token, active):
+            logits, new_cache = decode_step(params, cache, token, cfg,
+                                            tables=stacked_tables)
+            return logits, merge_slots(new_cache, cache, active, cfg)
+        step_fn.call_kind = "decode"
+
+        def shardings(params, cache, token, active):
+            pspec = _serving_param_specs(params, mesh)
+            cspec = shr.cache_specs(cache, cfg, mesh)
+            bspec = shr.batch_specs({"token": token, "active": active},
+                                    mesh)
+            return pspec, cspec, bspec["token"], bspec["active"]
+
+    else:                                  # "prefill_chunk"
+        def step_fn(params, cache, tokens, n_valid):
+            return decode_chunk(params, cache, tokens, n_valid, cfg,
+                                tables=stacked_tables)
+        caps = cfg.serving_capabilities()
+        step_fn.call_kind = (
+            "prefill_parallel"
+            if caps.parallel_prefill and not cfg.prefill_exact
+            else "prefill_chunk_exact")
+
+        def shardings(params, cache, tokens, n_valid):
+            pspec = _serving_param_specs(params, mesh)
+            cspec = shr.cache_specs(cache, cfg, mesh)
+            bspec = shr.batch_specs({"tokens": tokens, "n_valid": n_valid},
+                                    mesh)
+            return pspec, cspec, bspec["tokens"], bspec["n_valid"]
+
+    return step_fn, shardings
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh,
+                     int8_weights: bool = False, stacked_tables=None):
+    """Thin wrapper over build_step(call_kind="serve")."""
+    return build_step(cfg, mesh, "serve", stacked_tables=stacked_tables,
+                      int8_weights=int8_weights)
+
+
+def build_slot_decode_step(cfg: ModelConfig, mesh: Mesh,
+                           stacked_tables=None):
+    """Thin wrapper over build_step(call_kind="decode")."""
+    return build_step(cfg, mesh, "decode", stacked_tables=stacked_tables)
+
+
+def build_prefill_chunk_step(cfg: ModelConfig, mesh: Mesh,
+                             stacked_tables=None):
+    """Thin wrapper over build_step(call_kind="prefill_chunk")."""
+    return build_step(cfg, mesh, "prefill_chunk",
+                      stacked_tables=stacked_tables)
 
 
 def _serving_param_specs(params, mesh: Mesh):
@@ -153,67 +241,6 @@ def _serving_param_specs(params, mesh: Mesh):
     tp = mesh.shape.get("model", 1)
     fsdp = (pbytes / tp) > 12e9
     return shr.param_specs(params, mesh, fsdp=fsdp)
-
-
-def build_slot_decode_step(cfg: ModelConfig, mesh: Mesh,
-                           stacked_tables=None):
-    """Decode step for the serving engine: one fixed-shape (B, 1) token
-    step plus a per-slot ``active`` mask. Inactive slots (free, draining,
-    or mid-prefill while their neighbors decode) compute alongside the
-    batch but their cache writes and position advances are discarded
-    (models.decode.merge_slots) — continuous batching with ZERO
-    per-request recompilation. Positions come from cache["pos"], a (B,)
-    vector of per-slot depths."""
-
-    def slot_decode_step(params, cache, token, active):
-        logits, new_cache = decode_step(params, cache, token, cfg,
-                                        tables=stacked_tables)
-        return logits, merge_slots(new_cache, cache, active, cfg)
-    slot_decode_step.call_kind = "decode"
-
-    def shardings(params, cache, token, active):
-        pspec = _serving_param_specs(params, mesh)
-        cspec = shr.cache_specs(cache, cfg, mesh)
-        bspec = shr.batch_specs({"token": token, "active": active}, mesh)
-        return pspec, cspec, bspec["token"], bspec["active"]
-
-    return slot_decode_step, shardings
-
-
-def build_prefill_chunk_step(cfg: ModelConfig, mesh: Mesh,
-                             stacked_tables=None):
-    """Chunked cache-filling prefill step: C prompt tokens per slot in ONE
-    fixed-shape device call (models.decode.decode_chunk), so
-    time-to-first-token is ceil(P/C) steps instead of P. n_valid (B,)
-    carries each slot's real token count this chunk (0 = slot not
-    prefilling; its cache is untouched). stacked_tables threads the
-    uniform-MAXB joint-sparse packs through the chunk's layer scan —
-    prompt chunks run the DB-PIM kernel exactly like decode steps do.
-
-    The step fn carries a ``call_kind`` tag for per-kind cost attribution
-    (runtime.jaxpr_cost.analyze_call_kinds): SSM chunks default to the
-    parallel SSD form ("prefill_parallel" — one read of the stacked
-    in/out projections per chunk; models.ssm.prefill_ssm_parallel) and
-    fall back to the exact per-token recurrence ("prefill_chunk_exact")
-    when cfg.prefill_exact is set; attention chunks already project the
-    whole chunk in one matmul and are always exact."""
-
-    def prefill_chunk_step(params, cache, tokens, n_valid):
-        return decode_chunk(params, cache, tokens, n_valid, cfg,
-                            tables=stacked_tables)
-    prefill_chunk_step.call_kind = (
-        "prefill_parallel"
-        if cfg.supports_parallel_prefill and not cfg.prefill_exact
-        else "prefill_chunk_exact")
-
-    def shardings(params, cache, tokens, n_valid):
-        pspec = _serving_param_specs(params, mesh)
-        cspec = shr.cache_specs(cache, cfg, mesh)
-        bspec = shr.batch_specs({"tokens": tokens, "n_valid": n_valid},
-                                mesh)
-        return pspec, cspec, bspec["tokens"], bspec["n_valid"]
-
-    return prefill_chunk_step, shardings
 
 
 def build_prefill_step(cfg: ModelConfig, mesh: Mesh):

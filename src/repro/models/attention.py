@@ -160,18 +160,23 @@ def attention(p, x, cfg: ModelConfig, positions, causal: bool = True,
 
 
 def cross_attention(p, x, enc_out, cfg: ModelConfig, dense_fn=None):
-    """Decoder cross-attention over encoder output (whisper)."""
+    """Decoder cross-attention over encoder output (whisper). Hook names
+    carry the "xattn/" prefix: a decoder block's self- and cross-
+    attention projections pack as distinct table entries within the same
+    segment, so the dense_fn lookup must not collide."""
     mm = dense_fn or (lambda w, v, name: v @ w)
     B, S, _ = x.shape
     Se = enc_out.shape[1]
-    q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
-    k = _split_heads(mm(p["wk"], enc_out, "wk"), cfg.n_kv_heads, cfg.hd)
-    v = _split_heads(mm(p["wv"], enc_out, "wv"), cfg.n_kv_heads, cfg.hd)
+    q = _split_heads(mm(p["wq"], x, "xattn/wq"), cfg.n_heads, cfg.hd)
+    k = _split_heads(mm(p["wk"], enc_out, "xattn/wk"),
+                     cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(mm(p["wv"], enc_out, "xattn/wv"),
+                     cfg.n_kv_heads, cfg.hd)
     k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
     v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
     mask = jnp.ones((1, 1, S, Se), bool)
     out = _sdpa(q, k, v, mask, x.dtype)
-    return mm(p["wo"], out.reshape(B, S, cfg.q_dim), "wo")
+    return mm(p["wo"], out.reshape(B, S, cfg.q_dim), "xattn/wo")
 
 
 # ------------------------------------------------------------- cache -------

@@ -101,46 +101,44 @@ class ModelConfig:
         """Sub-quadratic support: SSM, hybrid, or sliding-window attention."""
         return self.family in ("ssm", "hybrid") or self.window > 0
 
+    def serving_capabilities(self):
+        """What the serving stack supports for this config, derived from
+        the segment layout (models.segments.ServingCapabilities): segment
+        descriptors, packable projections, prefill modes. Single source
+        of truth — the supports_* properties below are thin shims over
+        it, kept for callers written against the old boolean API."""
+        from .segments import serving_capabilities
+        return serving_capabilities(self)
+
     @property
     def supports_stacked_tables(self) -> bool:
-        """Families whose serving forwards are ONE homogeneous layer scan
-        — the ones the stacked joint-sparse tables can ride end-to-end.
-        MoE blocks qualify too: the expert stack is homogeneous per layer
-        ((E, K, N) per projection), so a grouped pack
-        (kernels.ops.pack_joint_sparse_grouped) rides the same scan with
-        a per-expert dispatch loop inside the body. Hybrid periods and
-        enc-dec stacks still mix sublayer kinds inside a scan step
-        (ROADMAP items). Single source of truth for build_stacked_tables
-        and the forward/decode guards."""
-        if self.family == "ssm":
-            return True
-        return bool(self.n_heads) and not self.is_encdec \
-            and self.family != "hybrid"
+        """Deprecated shim — use serving_capabilities().stacked_tables.
+        True for every family since the segmented per-kind layer scans:
+        each segment (attention / SSM / MoE / cross-attention run) packs
+        independently and rides its own scan, so hybrid periods and
+        enc-dec stacks serve through the joint kernel too."""
+        return self.serving_capabilities().stacked_tables
 
     @property
     def supports_chunked_prefill(self) -> bool:
-        """Families whose caches a multi-token chunk can fill with results
-        bit-identical to sequential decode steps: the homogeneous
-        dense-attention and SSM scans. Sliding-window ring buffers
-        overwrite slots within a chunk; MoE capacity dispatch makes the
-        token pool competing for expert slots part of the math (a C-token
-        chunk would route against a different capacity than C decode
-        steps), so MoE stays stepwise even though it serves through the
-        stacked tables; hybrid / enc-dec mix sublayer kinds. Those fall
-        back to stepwise prefill (serving.prefill)."""
-        if self.family == "ssm":
-            return True
-        return self.supports_stacked_tables and self.window == 0 \
-            and not self.n_experts
+        """Deprecated shim — use serving_capabilities().chunked_prefill.
+        True whenever attention is full-causal (window == 0): sliding-
+        window ring buffers overwrite slots within a chunk, which only a
+        sequential walk reproduces. MoE chunks dispatch expert capacity
+        per chunk position (each position competes exactly like one
+        decode step's token pool), and hybrid / enc-dec chunks walk the
+        segment list — so those families chunk too."""
+        return self.serving_capabilities().chunked_prefill
 
     @property
     def supports_parallel_prefill(self) -> bool:
-        """SSM only: the parallel-form (SSD) chunk evaluates C prompt
-        tokens with ONE read of the stacked in/out projections instead of
-        C (models.ssm.prefill_ssm_parallel). Attention chunked prefill
-        already projects the whole chunk in one matmul, so there is no
-        separate parallel form to pick there."""
-        return self.family == "ssm" and self.supports_chunked_prefill
+        """Deprecated shim — use serving_capabilities().parallel_prefill.
+        True when an SSM segment exists (ssm / hybrid families): its
+        chunk can use the parallel SSD form, reading the stacked in/out
+        projections ONCE per chunk instead of per token
+        (models.ssm.prefill_ssm_parallel). Attention chunks already
+        project the whole chunk in one matmul."""
+        return self.serving_capabilities().parallel_prefill
 
     def scaled(self, **kw) -> "ModelConfig":
         return replace(self, **kw)

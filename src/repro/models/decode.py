@@ -1,9 +1,13 @@
 """Serving path: cache init, prefill, and single-token decode for every
 family (dense/MoE/VLM, SSM, hybrid, enc-dec).
 
-Decode scans over the stacked layer params with the per-layer cache slices
-as scan inputs/outputs, so the HLO is O(1) in depth. Caches are static-
-shape; SWA archs allocate only the window (ring buffer).
+The decoder is a list of per-kind segments (models.segments): decode
+walks it, scanning each segment's stacked layer params with that
+segment's cache slices (and packed-table slices) as scan xs — the HLO
+stays O(segments) in depth, and every composition of attention / SSM /
+MoE / cross-attention sublayers flows through the same four bodies.
+Caches are static-shape; SWA archs allocate only the window (ring
+buffer).
 """
 
 from __future__ import annotations
@@ -18,7 +22,8 @@ from . import moe as moe_mod
 from . import ssm as ssm_mod
 from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, embed_tokens, logits_from_hidden)
-from .transformer import _sinusoidal, encode
+from .segments import decoder_layout
+from .transformer import _block_tail, _sinusoidal, encode, segment_tables
 
 
 # ---------------------------------------------------------------------------
@@ -27,23 +32,38 @@ from .transformer import _sinusoidal, encode
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                enc_out: Optional[jnp.ndarray] = None) -> Dict:
+    """Per-segment caches: attention segments hold stacked (L_seg, B, A,
+    Hkv, hd) k/v, SSM segments stacked (L_seg, B, ...) conv/state — the
+    batch axis is 1 EVERYWHERE (the old hybrid layout nested SSM slices
+    as (periods, P-1, B, ...), which forced family-switched axis math in
+    merge_slots). Single-segment stacks keep the historical "attn"/"ssm"
+    cache keys; hybrid stacks key by segment name."""
     cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
-    if cfg.family == "ssm":
-        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, cfg.n_layers)
-    elif cfg.family == "hybrid":
-        n_periods = cfg.n_layers // cfg.attn_period
-        cache["attn"] = attn_mod.init_cache(cfg, batch, max_len, n_periods)
-        cache["ssm"] = ssm_mod.init_ssm_cache(
-            cfg, batch, n_periods * (cfg.attn_period - 1))
-        # reshape ssm stacks to (n_periods, period-1, ...)
-        cache["ssm"] = jax.tree_util.tree_map(
-            lambda t: t.reshape((n_periods, cfg.attn_period - 1)
-                                + t.shape[1:]), cache["ssm"])
-    else:
-        cache["attn"] = attn_mod.init_cache(cfg, batch, max_len, cfg.n_layers)
+    for seg in decoder_layout(cfg):
+        if seg.mixer == "attn":
+            c = attn_mod.init_cache(cfg, batch, max_len, seg.length)
+            if seg.cache != "attn":
+                # multi-segment stacks track one global position only
+                c.pop("pos")
+            cache[seg.cache] = c
+        else:
+            cache[seg.cache] = ssm_mod.init_ssm_cache(cfg, batch,
+                                                      seg.length)
     if cfg.is_encdec and enc_out is not None:
         cache["enc_out"] = enc_out
     return cache
+
+
+def _sinusoidal_at(positions, d: int):
+    """Sinusoidal position embedding at explicit positions (B, S) ->
+    (B, S, d) float32. Same per-element math whether S is 1 (decode
+    step) or a chunk — what keeps chunked prefill bit-identical to
+    stepwise decode for rope_pct == 0 archs (whisper)."""
+    posf = positions.astype(jnp.float32)
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = posf[..., None] / (10000.0 ** (dim / d))
+    pe = jnp.zeros(posf.shape + (d,), jnp.float32)
+    return pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
 
 
 # ---------------------------------------------------------------------------
@@ -53,118 +73,58 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
     """token (B, 1) int32 -> (logits (B, 1, V), new cache).
 
-    tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
-    joint-sparse projection packs whose arrays ride the layer scan as xs
-    (next to the per-layer cache slices), so every decode-step projection
-    runs the DB-PIM kernel. Supported for the dense-attention (incl. MoE:
-    grouped expert packs dispatch one kernel call per expert slice) and
-    SSM family scans; None keeps the plain matmuls.
+    tables: sparsity.sparse_linear.SegmentedKernelTables — per-segment
+    uniform-MAXB joint-sparse projection packs whose arrays ride each
+    segment's layer scan as xs (next to the per-layer cache slices), so
+    every decode-step projection of every family runs the DB-PIM kernel
+    (MoE: grouped expert packs dispatch one kernel call per expert
+    slice; enc-dec: cross-attention packs next to self-attention; hybrid
+    segments pack independently). None keeps the plain matmuls.
     """
-    if tables is not None and not cfg.supports_stacked_tables:
-        raise ValueError(f"stacked kernel tables are not supported for "
-                         f"{cfg.name} (mixed-sublayer hybrid/enc-dec "
-                         f"scan)")
-
-    def layer_mm(slices):
-        return tables.dense_fn(slices) if tables is not None else None
-
-    txs = tables.arrays if tables is not None else None
+    segs = decoder_layout(cfg)
+    seg_tables = segment_tables(tables, segs, cfg)
     pos = cache["pos"]
+    B = token.shape[0]
     x = embed_tokens(params["embed"], token, cfg)
     if cfg.rope_pct == 0:
-        # sinusoidal position embedding at position `pos` (scalar, or (B,)
-        # when slots decode at different depths)
-        B = token.shape[0]
-        d = cfg.d_model
-        posv = attn_mod._per_slot_pos(pos, B).astype(jnp.float32)
-        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
-        ang = posv[:, None] / (10000.0 ** (dim / d))               # (B, d/2)
-        pe = jnp.zeros((B, d), jnp.float32)
-        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-        x = x + pe[:, None].astype(x.dtype)
-
+        posv = attn_mod._per_slot_pos(pos, B)
+        x = x + _sinusoidal_at(posv[:, None], cfg.d_model).astype(x.dtype)
+    enc_out = cache.get("enc_out")
     new_cache = dict(cache)
 
-    if cfg.family == "ssm":
-        def step(h, inp):
-            p, conv, state, slices = inp
-            hn = apply_norm(p["norm1"], h, cfg)
-            y, new_conv, new_state = ssm_mod.decode_ssm(
-                p["ssm"], hn, conv, state, cfg, dense_fn=layer_mm(slices))
-            return h + y, (new_conv, new_state)
-        x, (convs, states) = jax.lax.scan(
-            step, x, (params["blocks"], cache["ssm"]["conv"],
-                      cache["ssm"]["state"], txs))
-        new_cache["ssm"] = {"conv": convs, "state": states}
-
-    elif cfg.family == "hybrid":
-        def step(h, inp):
-            p, ck, cv, convs, states = inp
-            new_convs, new_states = [], []
-            ssm_i = 0
-            for i in range(cfg.attn_period):
-                sub = p[f"sub{i}"]
-                hn = apply_norm(sub["norm1"], h, cfg)
-                if i == cfg.attn_index:
-                    y, ck, cv = attn_mod.decode_attention(
-                        sub["attn"], hn, ck, cv, pos, cfg)
-                else:
-                    y, nc, ns = ssm_mod.decode_ssm(
-                        sub["ssm"], hn, convs[ssm_i], states[ssm_i], cfg)
-                    new_convs.append(nc)
-                    new_states.append(ns)
-                    ssm_i += 1
-                h = h + y
-                hn2 = apply_norm(sub["norm2"], h, cfg)
-                if "moe" in sub:
-                    y2, _ = moe_mod.apply_moe_block(sub["moe"], hn2, cfg)
-                else:
-                    y2 = apply_mlp(sub["mlp"], hn2, cfg)
-                h = h + y2
-            return h, (ck, cv, jnp.stack(new_convs), jnp.stack(new_states))
-        x, (cks, cvs, convs, states) = jax.lax.scan(
-            step, x, (params["periods"], cache["attn"]["k"],
-                      cache["attn"]["v"], cache["ssm"]["conv"],
-                      cache["ssm"]["state"]))
-        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
-        new_cache["ssm"] = {"conv": convs, "state": states}
-
-    elif cfg.is_encdec:
-        enc_out = cache["enc_out"]
-        def step(h, inp):
-            p, ck, cv = inp
-            hn = apply_norm(p["norm1"], h, cfg)
-            y, ck, cv = attn_mod.decode_attention(p["attn"], hn, ck, cv,
-                                                  pos, cfg)
-            h = h + y
-            hx = apply_norm(p["norm_x"], h, cfg)
-            h = h + attn_mod.cross_attention(p["xattn"], hx, enc_out, cfg)
-            h = h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
-            return h, (ck, cv)
-        x, (cks, cvs) = jax.lax.scan(
-            step, x, (params["blocks"], cache["attn"]["k"],
-                      cache["attn"]["v"]))
-        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
-
-    else:
-        def step(h, inp):
-            p, ck, cv, slices = inp
-            mm = layer_mm(slices)
-            hn = apply_norm(p["norm1"], h, cfg)
-            y, ck, cv = attn_mod.decode_attention(p["attn"], hn, ck, cv,
-                                                  pos, cfg, dense_fn=mm)
-            h = h + y
-            hn2 = apply_norm(p["norm2"], h, cfg)
-            if cfg.n_experts:
-                y2, _ = moe_mod.apply_moe_block(p["moe"], hn2, cfg,
-                                                dense_fn=mm)
-            else:
-                y2 = apply_mlp(p["mlp"], hn2, cfg, dense_fn=mm)
-            return h + y2, (ck, cv)
-        x, (cks, cvs) = jax.lax.scan(
-            step, x, (params["blocks"], cache["attn"]["k"],
-                      cache["attn"]["v"], txs))
-        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + 1}
+    for seg in segs:
+        st = seg_tables.get(seg.name)
+        txs = st.arrays if st is not None else None
+        mk = (lambda slices, st=st:
+              st.dense_fn(slices) if st is not None else None)
+        c = cache[seg.cache]
+        if seg.mixer == "attn":
+            def step(h, inp, seg=seg, mk=mk):
+                p, ck, cv, slices = inp
+                mm = mk(slices)
+                hn = apply_norm(p["norm1"], h, cfg)
+                y, ck, cv = attn_mod.decode_attention(
+                    p["attn"], hn, ck, cv, pos, cfg, dense_fn=mm)
+                h = _block_tail(seg, p, h + y, cfg, mm, enc_out)
+                return h, (ck, cv)
+            x, (cks, cvs) = jax.lax.scan(
+                step, x, (params[seg.name], c["k"], c["v"], txs))
+            nc = {"k": cks, "v": cvs}
+            if "pos" in c:
+                nc["pos"] = pos + 1
+            new_cache[seg.cache] = nc
+        else:
+            def step(h, inp, seg=seg, mk=mk):
+                p, conv, state, slices = inp
+                mm = mk(slices)
+                hn = apply_norm(p["norm1"], h, cfg)
+                y, conv, state = ssm_mod.decode_ssm(
+                    p["ssm"], hn, conv, state, cfg, dense_fn=mm)
+                h = _block_tail(seg, p, h + y, cfg, mm, enc_out)
+                return h, (conv, state)
+            x, (convs, states) = jax.lax.scan(
+                step, x, (params[seg.name], c["conv"], c["state"], txs))
+            new_cache[seg.cache] = {"conv": convs, "state": states}
 
     new_cache["pos"] = pos + 1
     x = apply_norm(params["final_norm"], x, cfg)
@@ -187,63 +147,80 @@ def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
     the unembedding runs once per chunk instead of once per prompt token.
 
     Per-token math vs running `decode_step` n_valid times: bit-identical
-    for attention families and for SSM with cfg.prefill_exact=True. The
-    default SSM path is the parallel SSD form (ssm.prefill_ssm_parallel)
-    — the in/out projections are read ONCE per chunk instead of once per
-    token, at the cost of tolerance-level (ssm.PARALLEL_PREFILL_ATOL)
-    instead of bitwise equivalence.
+    for attention segments (self- and cross-attention chunks project all
+    C tokens in one row-stable matmul), for MoE segments whenever the
+    per-position capacity covers every assignment (capacity() clamps to
+    B * top_k at decode-batch scale, so it always does — each chunk
+    position routes against exactly one decode step's token pool), and
+    for SSM segments with cfg.prefill_exact=True. The default SSM path
+    is the parallel SSD form (ssm.prefill_ssm_parallel) — the in/out
+    projections are read ONCE per chunk instead of once per token, at
+    the cost of tolerance-level (ssm.PARALLEL_PREFILL_ATOL) instead of
+    bitwise equivalence.
 
-    Like decode_step, `tables` threads the uniform-MAXB joint-sparse packs
-    through the layer scan, so prompt chunks run the DB-PIM kernel too.
+    Requires full causal attention (cfg.window == 0): a sliding-window
+    ring buffer overwrites slots within a chunk, which only a sequential
+    walk reproduces.
+
+    Like decode_step, `tables` threads the per-segment uniform-MAXB
+    joint-sparse packs through each segment's scan, so prompt chunks run
+    the DB-PIM kernel too.
     """
-    if not cfg.supports_chunked_prefill:
-        raise ValueError(f"chunked prefill is not supported for {cfg.name} "
-                         f"(windowed/MoE/hybrid/enc-dec); use stepwise "
+    if cfg.window:
+        raise ValueError(f"chunked prefill is not supported for {cfg.name}"
+                         f": sliding-window ring caches need stepwise "
                          f"prefill")
-    if tables is not None and not cfg.supports_stacked_tables:
-        raise ValueError(f"stacked kernel tables are not supported for "
-                         f"{cfg.name}")
+    segs = decoder_layout(cfg)
+    seg_tables = segment_tables(tables, segs, cfg)
     B, C = tokens.shape
     pos = attn_mod._per_slot_pos(cache["pos"], B)
     n_valid = jnp.asarray(n_valid, jnp.int32)
 
-    def layer_mm(slices):
-        return tables.dense_fn(slices) if tables is not None else None
-
-    txs = tables.arrays if tables is not None else None
     x = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.rope_pct == 0:
+        qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        x = x + _sinusoidal_at(qpos, cfg.d_model).astype(x.dtype)
+    enc_out = cache.get("enc_out")
     new_cache = dict(cache)
 
-    if cfg.family == "ssm":
-        ssm_prefill = (ssm_mod.prefill_ssm if cfg.prefill_exact
-                       else ssm_mod.prefill_ssm_parallel)
+    ssm_prefill = (ssm_mod.prefill_ssm if cfg.prefill_exact
+                   else ssm_mod.prefill_ssm_parallel)
 
-        def step(h, inp):
-            p, conv, state, slices = inp
-            hn = apply_norm(p["norm1"], h, cfg)
-            y, new_conv, new_state = ssm_prefill(
-                p["ssm"], hn, conv, state, n_valid, cfg,
-                dense_fn=layer_mm(slices))
-            return h + y, (new_conv, new_state)
-        x, (convs, states) = jax.lax.scan(
-            step, x, (params["blocks"], cache["ssm"]["conv"],
-                      cache["ssm"]["state"], txs))
-        new_cache["ssm"] = {"conv": convs, "state": states}
-    else:
-        def step(h, inp):
-            p, ck, cv, slices = inp
-            mm = layer_mm(slices)
-            hn = apply_norm(p["norm1"], h, cfg)
-            y, ck, cv = attn_mod.prefill_attention(
-                p["attn"], hn, ck, cv, pos, n_valid, cfg, dense_fn=mm)
-            h = h + y
-            hn2 = apply_norm(p["norm2"], h, cfg)
-            y2 = apply_mlp(p["mlp"], hn2, cfg, dense_fn=mm)
-            return h + y2, (ck, cv)
-        x, (cks, cvs) = jax.lax.scan(
-            step, x, (params["blocks"], cache["attn"]["k"],
-                      cache["attn"]["v"], txs))
-        new_cache["attn"] = {"k": cks, "v": cvs, "pos": pos + n_valid}
+    for seg in segs:
+        st = seg_tables.get(seg.name)
+        txs = st.arrays if st is not None else None
+        mk = (lambda slices, st=st:
+              st.dense_fn(slices) if st is not None else None)
+        c = cache[seg.cache]
+        if seg.mixer == "attn":
+            def step(h, inp, seg=seg, mk=mk):
+                p, ck, cv, slices = inp
+                mm = mk(slices)
+                hn = apply_norm(p["norm1"], h, cfg)
+                y, ck, cv = attn_mod.prefill_attention(
+                    p["attn"], hn, ck, cv, pos, n_valid, cfg, dense_fn=mm)
+                h = _block_tail(seg, p, h + y, cfg, mm, enc_out,
+                                per_position=True)
+                return h, (ck, cv)
+            x, (cks, cvs) = jax.lax.scan(
+                step, x, (params[seg.name], c["k"], c["v"], txs))
+            nc = {"k": cks, "v": cvs}
+            if "pos" in c:
+                nc["pos"] = pos + n_valid
+            new_cache[seg.cache] = nc
+        else:
+            def step(h, inp, seg=seg, mk=mk):
+                p, conv, state, slices = inp
+                mm = mk(slices)
+                hn = apply_norm(p["norm1"], h, cfg)
+                y, conv, state = ssm_prefill(
+                    p["ssm"], hn, conv, state, n_valid, cfg, dense_fn=mm)
+                h = _block_tail(seg, p, h + y, cfg, mm, enc_out,
+                                per_position=True)
+                return h, (conv, state)
+            x, (convs, states) = jax.lax.scan(
+                step, x, (params[seg.name], c["conv"], c["state"], txs))
+            new_cache[seg.cache] = {"conv": convs, "state": states}
 
     new_cache["pos"] = pos + n_valid
     x = apply_norm(params["final_norm"], x, cfg)
@@ -271,31 +248,27 @@ def merge_slots(new_cache, old_cache, keep_mask, cfg: ModelConfig):
     or draining): the step computes updates for every slot, and the merge
     discards the writes of inactive ones. Positions come out as (B,)
     vectors regardless of input shape. Encoder output (enc-dec) is shared
-    across the batch and passes through unchanged."""
+    across the batch and passes through unchanged.
+
+    The walk is layout-generic: every cache leaf carries the batch on
+    axis 1 ((L_seg, B, ...) for k/v, conv, and state alike — the
+    segmented layout), "pos" leaves select per-slot scalars, "enc_out"
+    passes through. No family switches."""
     B = keep_mask.shape[0]
 
     def sel_pos(new, old):
         return jnp.where(keep_mask, attn_mod._per_slot_pos(new, B),
                          attn_mod._per_slot_pos(old, B))
 
-    out = dict(new_cache)
-    out["pos"] = sel_pos(new_cache["pos"], old_cache["pos"])
-    if "attn" in new_cache:
-        a = dict(new_cache["attn"])
-        axis = 1                       # (L, B, A, Hkv, hd) / hybrid periods
-        for kname in ("k", "v"):
-            a[kname] = _select_batch(keep_mask, new_cache["attn"][kname],
-                                     old_cache["attn"][kname], axis)
-        if "pos" in a:
-            a["pos"] = sel_pos(new_cache["attn"]["pos"],
-                               old_cache["attn"]["pos"])
-        out["attn"] = a
-    if "ssm" in new_cache:
-        axis = 2 if cfg.family == "hybrid" else 1
-        out["ssm"] = jax.tree_util.tree_map(
-            lambda n, o: _select_batch(keep_mask, n, o, axis),
-            new_cache["ssm"], old_cache["ssm"])
-    return out
+    def visit(path, new, old):
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key == "pos":
+            return sel_pos(new, old)
+        if key == "enc_out":
+            return new
+        return _select_batch(keep_mask, new, old, axis=1)
+
+    return jax.tree_util.tree_map_with_path(visit, new_cache, old_cache)
 
 
 def reset_slots(cache, slot_mask, cfg: ModelConfig):

@@ -96,7 +96,8 @@ def _group_combine(out_ec, slot, w, Tg: int):
     return jnp.einsum("tkd,tk->td", gathered, w.astype(out_ec.dtype))
 
 
-def apply_moe(p, x, cfg: ModelConfig, expert_fn=None):
+def apply_moe(p, x, cfg: ModelConfig, expert_fn=None,
+              per_position: bool = False):
     """x (B, S, D) -> (B, S, D), plus aux losses dict.
 
     Grouped dispatch: tokens are split into G = B groups (sequences) with
@@ -105,18 +106,29 @@ def apply_moe(p, x, cfg: ModelConfig, expert_fn=None):
     einsum over (G, E, C, D) with the FFN dim tensor-parallel — or, when
     ``expert_fn`` is hooked (stacked joint-sparse serving), as one
     DB-PIM kernel call per packed expert slice.
+
+    per_position=True (chunked prefill) groups by SEQUENCE POSITION
+    instead: G = S groups of the B slot tokens at that position, with
+    capacity(cfg, B) — exactly the pool one serving decode step routes
+    against, so a C-token chunk reproduces C decode steps' expert
+    assignments whenever capacity covers all assignments (it always does
+    at decode-batch scale, where capacity() clamps to B * top_k).
     """
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    # Decode (S small): one flat group — per-sequence groups of 1 token
-    # would pad every expert's capacity to the minimum and waste E*C_min
-    # slots per token (512x for arctic).
-    if S >= 64:
+    if per_position:
+        G, Tg = S, B
+        xg = jnp.swapaxes(x, 0, 1)                         # (S, B, D)
+    elif S >= 64:
         G, Tg = B, S
+        xg = x
     else:
+        # Decode (S small): one flat group — per-sequence groups of 1
+        # token would pad every expert's capacity to the minimum and
+        # waste E*C_min slots per token (512x for arctic).
         G, Tg = 1, B * S
+        xg = x.reshape(G, Tg, D)
     C = capacity(cfg, Tg)
-    xg = x.reshape(G, Tg, D)
 
     logits = (xg.astype(jnp.float32) @ p["router"])        # (G, Tg, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -145,7 +157,8 @@ def apply_moe(p, x, cfg: ModelConfig, expert_fn=None):
     keep_frac = jnp.mean((slot < E * C).astype(jnp.float32))
     aux = {"load_balance": E * jnp.sum(me * ce),
            "dropped_frac": 1.0 - keep_frac}
-    return yg.reshape(B, S, D), aux
+    y = jnp.swapaxes(yg, 0, 1) if per_position else yg.reshape(B, S, D)
+    return y, aux
 
 
 def _expert_ffn_grouped(p, xin, cfg: ModelConfig, expert_fn=None):
@@ -165,16 +178,20 @@ def _expert_ffn_grouped(p, xin, cfg: ModelConfig, expert_fn=None):
     return mm(p["w_down"], h, "moe/w_down")
 
 
-def apply_moe_block(p, x, cfg: ModelConfig, dense_fn=None):
+def apply_moe_block(p, x, cfg: ModelConfig, dense_fn=None,
+                    per_position: bool = False):
     """MoE (+ optional arctic dense residual MLP in parallel).
 
     ``dense_fn`` is the per-layer DB-PIM hook
     (StackedKernelTables.dense_fn(slices) on the serving path): its
     ``expert`` attribute serves the grouped expert projections through
     the joint kernel, and the hook itself serves the arctic dense
-    residual MLP. Plain None keeps every matmul dense."""
+    residual MLP. Plain None keeps every matmul dense. per_position
+    groups capacity dispatch by sequence position (chunked prefill —
+    see apply_moe)."""
     y, aux = apply_moe(p, x, cfg,
-                       expert_fn=getattr(dense_fn, "expert", None))
+                       expert_fn=getattr(dense_fn, "expert", None),
+                       per_position=per_position)
     if cfg.dense_residual:
         y = y + apply_mlp(p["dense_mlp"], x, cfg, dense_fn)
     return y, aux

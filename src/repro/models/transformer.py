@@ -9,8 +9,7 @@ creates the stacked params; under `jax.eval_shape` this allocates nothing.
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,61 +21,31 @@ from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, cross_entropy, dtype_of,
                      embed_tokens, init_embeddings, init_mlp, init_norm,
                      logits_from_hidden)
+from .segments import Segment, decoder_layout, encoder_layout
 
 
 # ---------------------------------------------------------------------------
 # Parameter construction
 # ---------------------------------------------------------------------------
 
-def _init_dense_block(cfg: ModelConfig, key):
-    k1, k2 = jax.random.split(key)
-    p = {"norm1": init_norm(cfg, cfg.d_model),
-         "norm2": init_norm(cfg, cfg.d_model),
-         "attn": attn_mod.init_attention(cfg, k1)}
-    if cfg.n_experts:
-        p["moe"] = moe_mod.init_moe_block(cfg, k2)
-    else:
-        p["mlp"] = init_mlp(cfg, k2, cfg.d_model, cfg.d_ff)
-    return p
-
-
-def _init_ssm_block(cfg: ModelConfig, key):
-    return {"norm1": init_norm(cfg, cfg.d_model),
-            "ssm": ssm_mod.init_ssm(cfg, key)}
-
-
-def _init_hybrid_period(cfg: ModelConfig, key):
-    """One Jamba period: `attn_period` sublayers, attention at attn_index,
-    Mamba elsewhere; MoE on every `moe_every`-th sublayer, dense MLP on the
-    rest. Each sublayer keeps its own FFN."""
-    P = cfg.attn_period
-    keys = jax.random.split(key, 2 * P)
-    subs = []
-    for i in range(P):
-        mixer_key, ffn_key = keys[2 * i], keys[2 * i + 1]
-        sub = {"norm1": init_norm(cfg, cfg.d_model),
-               "norm2": init_norm(cfg, cfg.d_model)}
-        if i == cfg.attn_index:
-            sub["attn"] = attn_mod.init_attention(cfg, mixer_key)
-        else:
-            sub["ssm"] = ssm_mod.init_ssm(cfg, mixer_key)
-        if cfg.n_experts and (i % cfg.moe_every == cfg.moe_every - 1):
-            sub["moe"] = moe_mod.init_moe_block(cfg, ffn_key)
-        else:
-            sub["mlp"] = init_mlp(cfg, ffn_key, cfg.d_model, cfg.d_ff)
-        subs.append(sub)
-    return {f"sub{i}": s for i, s in enumerate(subs)}
-
-
-def _init_encdec_block(cfg: ModelConfig, key, cross: bool):
+def _init_block(cfg: ModelConfig, key, seg: Segment):
+    """One layer of a segment: norm + mixer, optional cross-attention,
+    optional FFN — the kind is the segment descriptor, not cfg.family."""
     k1, k2, k3 = jax.random.split(key, 3)
-    p = {"norm1": init_norm(cfg, cfg.d_model),
-         "norm2": init_norm(cfg, cfg.d_model),
-         "attn": attn_mod.init_attention(cfg, k1),
-         "mlp": init_mlp(cfg, k2, cfg.d_model, cfg.d_ff)}
-    if cross:
+    p = {"norm1": init_norm(cfg, cfg.d_model)}
+    if seg.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(cfg, k1)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(cfg, k1)
+    if seg.cross:
         p["norm_x"] = init_norm(cfg, cfg.d_model)
         p["xattn"] = attn_mod.init_attention(cfg, k3)
+    if seg.ffn == "moe":
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        p["moe"] = moe_mod.init_moe_block(cfg, k2)
+    elif seg.ffn == "mlp":
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        p["mlp"] = init_mlp(cfg, k2, cfg.d_model, cfg.d_ff)
     return p
 
 
@@ -88,24 +57,15 @@ def init_params(cfg: ModelConfig, key) -> Dict:
     ke, kb, kenc = jax.random.split(key, 3)
     params = {"embed": init_embeddings(cfg, ke),
               "final_norm": init_norm(cfg, cfg.d_model)}
-    if cfg.family == "ssm":
-        params["blocks"] = _stacked(lambda k: _init_ssm_block(cfg, k),
-                                    cfg.n_layers, kb)
-    elif cfg.family == "hybrid":
-        n_periods = cfg.n_layers // cfg.attn_period
-        params["periods"] = _stacked(lambda k: _init_hybrid_period(cfg, k),
-                                     n_periods, kb)
-    elif cfg.is_encdec:
-        params["blocks"] = _stacked(
-            lambda k: _init_encdec_block(cfg, k, cross=True),
-            cfg.n_layers, kb)
+    segs = decoder_layout(cfg)
+    for seg, sk in zip(segs, jax.random.split(kb, len(segs))):
+        params[seg.name] = _stacked(lambda k, s=seg: _init_block(cfg, k, s),
+                                    seg.length, sk)
+    if cfg.is_encdec:
+        enc_seg = encoder_layout(cfg)[0]
         params["enc_blocks"] = _stacked(
-            lambda k: _init_encdec_block(cfg, k, cross=False),
-            cfg.encoder_layers, kenc)
+            lambda k: _init_block(cfg, k, enc_seg), enc_seg.length, kenc)
         params["enc_final_norm"] = init_norm(cfg, cfg.d_model)
-    else:
-        params["blocks"] = _stacked(lambda k: _init_dense_block(cfg, k),
-                                    cfg.n_layers, kb)
     if cfg.frontend == "vision_stub":
         # projection of precomputed patch embeddings into the LM stream
         params["patch_proj"] = (jax.random.normal(
@@ -127,44 +87,46 @@ def _sinusoidal(S: int, d: int, dtype):
     return pe.astype(dtype)
 
 
-def _dense_block_fwd(p, x, cfg: ModelConfig, positions, mm=None):
-    h = x + attn_mod.attention(p["attn"], apply_norm(p["norm1"], x, cfg),
-                               cfg, positions, dense_fn=mm)
-    hn = apply_norm(p["norm2"], h, cfg)
-    if cfg.n_experts:
-        y, _aux = moe_mod.apply_moe_block(p["moe"], hn, cfg, dense_fn=mm)
-    else:
-        y = apply_mlp(p["mlp"], hn, cfg, dense_fn=mm)
-    return h + y
+def _block_tail(seg: Segment, p, h, cfg: ModelConfig, mm=None,
+                enc_out=None, per_position: bool = False):
+    """The sublayers after the mixer, shared by every execution mode
+    (train forward / decode step / prefill chunk): optional
+    cross-attention over the encoder output, then the FFN. per_position
+    groups MoE capacity dispatch by chunk position (prefill chunks) so
+    each position's token pool competes exactly like one decode step."""
+    if seg.cross:
+        hx = apply_norm(p["norm_x"], h, cfg)
+        h = h + attn_mod.cross_attention(p["xattn"], hx, enc_out, cfg,
+                                         dense_fn=mm)
+    if seg.ffn == "moe":
+        y, _aux = moe_mod.apply_moe_block(
+            p["moe"], apply_norm(p["norm2"], h, cfg), cfg, dense_fn=mm,
+            per_position=per_position)
+        h = h + y
+    elif seg.ffn == "mlp":
+        h = h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg,
+                          dense_fn=mm)
+    return h
 
 
-def _ssm_block_fwd(p, x, cfg: ModelConfig, mm=None):
-    return x + ssm_mod.apply_ssm(p["ssm"], apply_norm(p["norm1"], x, cfg),
-                                 cfg, dense_fn=mm)
-
-
-def _hybrid_period_fwd(p, x, cfg: ModelConfig, positions):
-    # Each sublayer is itself rematerialized: the 8-sublayer period body
-    # otherwise keeps every sublayer's intermediates live as residuals
-    # (jamba train temp was 80 GB/dev with period-level remat only).
-    def sublayer(i, sub, h):
-        hn = apply_norm(sub["norm1"], h, cfg)
-        if i == cfg.attn_index:
-            h = h + attn_mod.attention(sub["attn"], hn, cfg, positions)
-        else:
-            h = h + ssm_mod.apply_ssm(sub["ssm"], hn, cfg)
-        hn2 = apply_norm(sub["norm2"], h, cfg)
-        if "moe" in sub:
-            y, _aux = moe_mod.apply_moe_block(sub["moe"], hn2, cfg)
-        else:
-            y = apply_mlp(sub["mlp"], hn2, cfg)
-        return h + y
-
-    for i in range(cfg.attn_period):
-        fn = jax.checkpoint(functools.partial(sublayer, i)) if cfg.remat \
-            else functools.partial(sublayer, i)
-        x = fn(p[f"sub{i}"], x)
-    return x
+def segment_tables(tables, segs, cfg: ModelConfig):
+    """Per-segment table lookup for a segment layout. Returns {} for
+    dense serving; raises when the tables were packed for a different
+    segment layout (e.g. a single-"blocks" pack handed to a hybrid
+    stack) — a shape mismatch would otherwise surface as a cryptic scan
+    error deep inside the kernel."""
+    if tables is None:
+        return {}
+    seg_map = getattr(tables, "segments", None)
+    if seg_map is None:
+        raise ValueError("stacked tables must be a segmented pack "
+                         "(sparsity.sparse_linear.build_stacked_tables)")
+    missing = [s.name for s in segs if s.name not in seg_map]
+    if missing:
+        raise ValueError(f"stacked tables do not match {cfg.name}'s "
+                         f"segment layout: missing segments {missing} "
+                         f"(packed: {sorted(seg_map)})")
+    return seg_map
 
 
 def _scan_stack(blocks, x, body, remat: bool, policy: str = "full",
@@ -224,10 +186,11 @@ def forward(params, tokens, cfg: ModelConfig,
     only. enc_out: whisper encoder output for cross-attention.
     last_only: unembed only the final position (prefill) — at 150k vocab,
     unembedding all 32k positions would dominate prefill compute/memory.
-    tables: sparsity.sparse_linear.StackedKernelTables — uniform-MAXB
-    joint-sparse projections that ride the layer scan as xs, so the
-    DB-PIM kernel serves every layer (dense / MoE / SSM families; MoE
-    expert stacks dispatch per packed expert slice).
+    tables: sparsity.sparse_linear.SegmentedKernelTables — per-segment
+    uniform-MAXB joint-sparse projections that ride each segment's scan
+    as xs, so the DB-PIM kernel serves every layer of every family (MoE
+    expert stacks dispatch per packed expert slice; hybrid segments and
+    enc-dec cross-attention pack too).
     """
     B, S = tokens.shape
     x = embed_tokens(params["embed"], tokens, cfg)
@@ -241,30 +204,19 @@ def forward(params, tokens, cfg: ModelConfig,
     positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
                                  (B, x.shape[1]))
 
-    if tables is not None and not cfg.supports_stacked_tables:
-        raise ValueError(f"stacked kernel tables are not supported for the "
-                         f"{cfg.family} family yet (mixed-sublayer "
-                         f"hybrid/enc-dec scans)")
-
-    if cfg.family == "ssm":
-        body = lambda p, h, mm: _ssm_block_fwd(p, h, cfg, mm)
-        x = _scan_stack(params["blocks"], x, body, cfg.remat,
-                        cfg.remat_policy, tables=tables)
-    elif cfg.family == "hybrid":
-        body = lambda p, h, mm: _hybrid_period_fwd(p, h, cfg, positions)
-        x = _scan_stack(params["periods"], x, body, cfg.remat, cfg.remat_policy)
-    elif cfg.is_encdec:
-        def body(p, h, mm):
+    segs = decoder_layout(cfg)
+    seg_tables = segment_tables(tables, segs, cfg)
+    for seg in segs:
+        def body(p, h, mm, seg=seg):
             hn = apply_norm(p["norm1"], h, cfg)
-            h = h + attn_mod.attention(p["attn"], hn, cfg, positions)
-            hx = apply_norm(p["norm_x"], h, cfg)
-            h = h + attn_mod.cross_attention(p["xattn"], hx, enc_out, cfg)
-            return h + apply_mlp(p["mlp"], apply_norm(p["norm2"], h, cfg), cfg)
-        x = _scan_stack(params["blocks"], x, body, cfg.remat, cfg.remat_policy)
-    else:
-        body = lambda p, h, mm: _dense_block_fwd(p, h, cfg, positions, mm)
-        x = _scan_stack(params["blocks"], x, body, cfg.remat,
-                        cfg.remat_policy, tables=tables)
+            if seg.mixer == "attn":
+                h = h + attn_mod.attention(p["attn"], hn, cfg, positions,
+                                           dense_fn=mm)
+            else:
+                h = h + ssm_mod.apply_ssm(p["ssm"], hn, cfg, dense_fn=mm)
+            return _block_tail(seg, p, h, cfg, mm, enc_out)
+        x = _scan_stack(params[seg.name], x, body, cfg.remat,
+                        cfg.remat_policy, tables=seg_tables.get(seg.name))
 
     x = apply_norm(params["final_norm"], x, cfg)
     if n_front:

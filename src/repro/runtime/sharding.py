@@ -117,7 +117,8 @@ def _spec_for(kind: str, shape, mesh: Mesh, offset: int) -> P:
 def param_specs(params, mesh: Mesh, fsdp: bool = True,
                 fsdp_min_elems: int = 1 << 20):
     """PartitionSpec pytree for a param tree (stacked layer dims detected
-    from tree position: blocks/periods/enc_blocks live under a stack).
+    from tree position: blocks/enc_blocks/segNN segment stacks carry a
+    leading layer axis).
 
     fsdp=True additionally shards each large tensor's biggest unsharded
     dim over the DP axes (ZeRO-3 / FSDP): XLA all-gathers weights at use.
@@ -132,7 +133,7 @@ def param_specs(params, mesh: Mesh, fsdp: bool = True,
             pathstr = pathstr[:-2]         # int8 payload: weight rules
         # stacked containers contribute leading layer axes
         offset = 0
-        if re.search(r"^(blocks|enc_blocks|periods)/", pathstr):
+        if re.search(r"^(blocks|enc_blocks|seg\d+)/", pathstr):
             offset = 1
         spec = P()
         for pat, kind in _PARAM_RULES:
@@ -216,7 +217,8 @@ def cache_specs(cache_tree, cfg, mesh: Mesh):
     """KV/SSM cache sharding for decode.
 
     Layout reminders: attn k/v (L, B, A, Hkv, hd); ssm conv
-    (L, B, W-1, C) [hybrid: (Lp, P-1, B, ...)], ssm state (L, B, H, Pd, N).
+    (L, B, W-1, C), ssm state (L, B, H, Pd, N) — uniform across segments
+    (hybrid segments use the same per-segment layouts).
     Batch shards over DP when divisible; otherwise (long_500k, B=1) the
     cache SEQUENCE dim shards over `data` (sequence-parallel decode) and
     SSM state heads shard over `data`. KV heads shard over `model` when

@@ -11,7 +11,7 @@ executables (three with slot reset), fixed-shape so NO recompilation ever
 happens per request:
 
   * decode step   (B, 1) tokens + (B,) active mask
-    (launch.steps.build_slot_decode_step — inactive slots' cache writes
+    (launch.steps.build_step("decode") — inactive slots' cache writes
     are discarded by models.decode.merge_slots);
   * prefill chunk (B, C) tokens + (B,) n_valid
     (serving.prefill.build_chunk_step — only in "chunked" mode);
@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import make_test_mesh
-from repro.launch.steps import build_slot_decode_step
+from repro.launch.steps import build_step
 from repro.models import init_cache, reset_slots
 from repro.runtime import sharding as shr
 from repro.serving.metrics import MetricsRecorder
@@ -116,9 +116,11 @@ class ServeEngine:
         if schedule not in self.SCHEDULES:
             raise ValueError(f"schedule {schedule!r} not in "
                              f"{self.SCHEDULES}")
-        if prefill_mode == "chunked" and not cfg.supports_chunked_prefill:
-            # windowed / MoE / hybrid / enc-dec families: chunk semantics
-            # can't reproduce sequential decode — serve them stepwise
+        if prefill_mode == "chunked" and \
+                not cfg.serving_capabilities().chunked_prefill:
+            # sliding-window families only: the ring cache needs stepwise
+            # writes — every other family (MoE, hybrid, enc-dec included)
+            # chunk-prefills through the segmented decode_chunk path
             prefill_mode = "full"
         self.cfg = cfg
         self.mesh = mesh or make_test_mesh()
@@ -140,8 +142,8 @@ class ServeEngine:
                 cache["attn"]["pos"] = jnp.zeros((n_slots,), jnp.int32)
             self.cache = cache
 
-            decode_fn, shard_fn = build_slot_decode_step(
-                cfg, self.mesh, stacked_tables=stacked_tables)
+            decode_fn, shard_fn = build_step(
+                cfg, self.mesh, "decode", stacked_tables=stacked_tables)
             tok0 = jnp.zeros((n_slots, 1), jnp.int32)
             act0 = jnp.zeros((n_slots,), bool)
             pspec, cspec, tspec, aspec = shard_fn(params, cache, tok0, act0)

@@ -3,7 +3,7 @@
 Two prefill policies over the SAME per-slot caches:
 
   * "chunked" — fixed-shape (B, prefill_chunk) chunks through
-    ``launch.steps.build_prefill_chunk_step`` (-> models.decode_chunk):
+    ``launch.steps.build_step("prefill_chunk")`` (-> models.decode_chunk):
     each prefilling slot advances up to ``prefill_chunk`` prompt tokens
     per device call, so time-to-first-token is ceil(P/C) calls. Chunks
     ride the stacked joint-sparse tables exactly like decode steps.
@@ -35,7 +35,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.launch.steps import build_prefill_chunk_step
+from repro.launch.steps import build_step
 from repro.runtime import sharding as shr
 
 PREFILL_MODES = ("chunked", "full")
@@ -71,8 +71,8 @@ def build_chunk_step(cfg, mesh, params, cache, n_slots: int, chunk: int,
     n_valid), which is what keeps admission latency flat under load."""
     import jax.numpy as jnp
 
-    step_fn, shard_fn = build_prefill_chunk_step(
-        cfg, mesh, stacked_tables=stacked_tables)
+    step_fn, shard_fn = build_step(cfg, mesh, "prefill_chunk",
+                                   stacked_tables=stacked_tables)
     tok0 = jnp.zeros((n_slots, chunk), jnp.int32)
     nv0 = jnp.zeros((n_slots,), jnp.int32)
     pspec, cspec, tspec, nspec = shard_fn(params, cache, tok0, nv0)

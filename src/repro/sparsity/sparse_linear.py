@@ -320,29 +320,73 @@ class StackedKernelTables:
         return mm
 
 
+@dataclass
+class SegmentedKernelTables:
+    """Per-segment stacked packs for a whole decoder (models.segments
+    layout): ``segments`` maps segment name -> StackedKernelTables, each
+    packed independently with its own shared MAXB. The forward/decode
+    segment loops thread ``segments[seg.name]`` through that segment's
+    scan.
+
+    ``arrays`` / ``static`` present the flat single-dict view older
+    consumers (benchmarks, launch.serve byte accounting) iterate:
+    single-segment stacks pass through unprefixed (identical to the
+    pre-segmentation layout); multi-segment stacks prefix keys with the
+    segment name ("seg02/wq")."""
+    segments: Dict[str, StackedKernelTables]
+
+    @property
+    def arrays(self) -> Dict[str, Dict[str, jnp.ndarray]]:
+        if set(self.segments) == {"blocks"}:
+            return self.segments["blocks"].arrays
+        return {f"{s}/{name}": t
+                for s, seg in self.segments.items()
+                for name, t in seg.arrays.items()}
+
+    @property
+    def static(self) -> Dict[str, Tuple[int, int, int]]:
+        if set(self.segments) == {"blocks"}:
+            return self.segments["blocks"].static
+        return {f"{s}/{name}": t
+                for s, seg in self.segments.items()
+                for name, t in seg.static.items()}
+
+
 def _stacked_projections(params, cfg: ModelConfig):
-    """name -> stacked weight for the families whose serving forwards are
-    a single layer scan (cfg.supports_stacked_tables — the shared
-    predicate the forward/decode guards also use). Rank-3 (L, K, N)
-    entries pack per-layer; rank-4 ``moe/*`` entries (L, E, K, N) pack
-    grouped across the expert axis too. Routers stay dense (same
-    reasoning as the paper's dw-conv exclusion: tiny, accuracy-critical).
-    """
-    if not cfg.supports_stacked_tables or "blocks" not in params:
-        return None
-    if cfg.family == "ssm":
-        b = params["blocks"]["ssm"]
-        return {"in_proj": b["in_proj"], "out_proj": b["out_proj"]}
-    out = {k: params["blocks"]["attn"][k] for k in ("wq", "wk", "wv", "wo")}
-    if cfg.n_experts:
-        moe = params["blocks"]["moe"]
-        out.update({f"moe/{k}": moe[k]
-                    for k in ("w_gate", "w_up", "w_down") if k in moe})
-        if cfg.dense_residual:
-            out.update(moe["dense_mlp"])
-    else:
-        out.update(params["blocks"]["mlp"])
+    """segment name -> {hook name -> stacked weight} for every decoder
+    segment (models.segments.decoder_layout / packable_projections —
+    the shared single source of truth). Rank-3 (L, K, N) entries pack
+    per-layer; rank-4 ``moe/*`` entries (L, E, K, N) pack grouped across
+    the expert axis too. Routers stay dense (same reasoning as the
+    paper's dw-conv exclusion: tiny, accuracy-critical). Returns None
+    (dense serving) when the param tree does not carry the stacked
+    segment subtrees."""
+    from repro.models.segments import decoder_layout, packable_projections
+
+    out = {}
+    for seg in decoder_layout(cfg):
+        blk = params.get(seg.name)
+        if blk is None:
+            return None
+        projs = {}
+        for name in packable_projections(seg, cfg):
+            node = blk
+            for part in _proj_subpath(seg, name).split("/"):
+                node = node.get(part) if isinstance(node, dict) else None
+                if node is None:
+                    break
+            if node is None:
+                continue        # e.g. gelu MLP has no w_gate
+            projs[name] = node
+        out[seg.name] = projs
     return out
+
+
+def _proj_subpath(seg, name: str) -> str:
+    """Param subpath of a hook name within one segment's block tree."""
+    from repro.models.segments import projection_param_path
+    full = projection_param_path(seg, name)
+    return full[len(seg.name) + 1:]
 
 
 def build_stacked_tables(params, cfg: ModelConfig,
@@ -350,8 +394,9 @@ def build_stacked_tables(params, cfg: ModelConfig,
                          value_sparsity: Optional[float] = None,
                          bk: Optional[int] = None, bn: Optional[int] = None,
                          interpret: Optional[bool] = None,
-                         ) -> Optional[StackedKernelTables]:
-    """Pack every eligible stacked projection of `params` for serving.
+                         ) -> Optional[SegmentedKernelTables]:
+    """Pack every eligible stacked projection of `params` for serving,
+    per decoder segment (each segment gets its own shared-MAXB pack).
 
     mode "joint" packs at cfg.dbpim_value_sparsity (column-balanced tile
     pruning + INT8/FTA payload: (1 - vs) * 0.5 of dense bf16 weight
@@ -362,9 +407,13 @@ def build_stacked_tables(params, cfg: ModelConfig,
     sparsity also serves end-to-end through the scan. "dense" returns
     None — plain matmuls.
 
-    Returns None (dense serving) for unsupported families. bk/bn default
-    to the kernel tile, clamped down to the padded projection dims so
-    reduced smoke configs (d_model < 128) do not pack pure padding.
+    Every family packs (the segment layout closed the matrix: hybrid
+    sublayer runs and the whisper decoder — including cross-attention —
+    are segments like any other; the whisper ENCODER stays dense, it
+    runs once per request and never rides decode-step weight traffic).
+    bk/bn default to the kernel tile, clamped down to the padded
+    projection dims so reduced smoke configs (d_model < 128) do not pack
+    pure padding.
     """
     from repro.kernels import ops
 
@@ -379,26 +428,49 @@ def build_stacked_tables(params, cfg: ModelConfig,
         vs = value_sparsity if value_sparsity is not None else \
             cfg.dbpim_value_sparsity
     payload = "bf16" if mode == "value" else "int8"
-    projections = _stacked_projections(params, cfg)
-    if projections is None:
+    by_segment = _stacked_projections(params, cfg)
+    if by_segment is None:
         return None
 
-    arrays: Dict[str, Dict[str, jnp.ndarray]] = {}
-    static: Dict[str, Tuple[int, int, int]] = {}
-    for name, w in projections.items():
-        w = np.asarray(w, np.float32)
-        _round8 = lambda d: max(8, 8 * (-(-d // 8)))
-        bk_eff = bk if bk is not None else min(ops.BK, _round8(w.shape[-2]))
-        bn_eff = bn if bn is not None else min(ops.BN, _round8(w.shape[-1]))
-        pack = (ops.pack_joint_sparse_grouped if w.ndim == 4
-                else ops.pack_joint_sparse_stacked)
-        packed = pack(w, value_sparsity=vs or None, bk=bk_eff, bn=bn_eff,
-                      payload=payload)
-        arrays[name] = {"w_blocks": packed.w_blocks, "idx": packed.idx,
-                       "scales": packed.scales, "nblocks": packed.nblocks}
-        static[name] = (packed.k, packed.n, packed.k_pad)
-    return StackedKernelTables(arrays=arrays, static=static,
-                               interpret=interpret)
+    segments: Dict[str, StackedKernelTables] = {}
+    for seg_name, projections in by_segment.items():
+        arrays: Dict[str, Dict[str, jnp.ndarray]] = {}
+        static: Dict[str, Tuple[int, int, int]] = {}
+        for name, w in projections.items():
+            w = np.asarray(w, np.float32)
+            _round8 = lambda d: max(8, 8 * (-(-d // 8)))
+            bk_eff = bk if bk is not None else min(ops.BK,
+                                                   _round8(w.shape[-2]))
+            bn_eff = bn if bn is not None else min(ops.BN,
+                                                   _round8(w.shape[-1]))
+            pack = (ops.pack_joint_sparse_grouped if w.ndim == 4
+                    else ops.pack_joint_sparse_stacked)
+            packed = pack(w, value_sparsity=vs or None, bk=bk_eff,
+                          bn=bn_eff, payload=payload)
+            arrays[name] = {"w_blocks": packed.w_blocks, "idx": packed.idx,
+                           "scales": packed.scales,
+                           "nblocks": packed.nblocks}
+            static[name] = (packed.k, packed.n, packed.k_pad)
+        segments[seg_name] = StackedKernelTables(arrays=arrays,
+                                                 static=static,
+                                                 interpret=interpret)
+    return SegmentedKernelTables(segments=segments)
+
+
+def _packed_param_paths(cfg: ModelConfig):
+    """Exact '/'-joined param paths of every packable projection. Exact
+    paths — not suffixes — so a whisper decoder pack strips the decoder's
+    cross-attention copies but never the dense encoder's identically-
+    suffixed ones, and hybrid per-segment copies strip one segment at a
+    time."""
+    from repro.models.segments import (decoder_layout,
+                                       packable_projections,
+                                       projection_param_path)
+    paths = set()
+    for seg in decoder_layout(cfg):
+        for name in packable_projections(seg, cfg):
+            paths.add(projection_param_path(seg, name))
+    return paths
 
 
 def strip_packed_projections(params, cfg: ModelConfig):
@@ -408,52 +480,52 @@ def strip_packed_projections(params, cfg: ModelConfig):
     cost ~1.3x dense HBM instead of ~0.3x. The placeholder keeps the
     param tree structure (scan xs still slice a leading layer axis; the
     dense_fn hook never reads the weight it intercepts) and falls through
-    every sharding rule to replicated."""
-    projections = _stacked_projections(params, cfg)
-    if projections is None:
+    every sharding rule to replicated. Strips exactly what
+    build_stacked_tables packs — cross-attention and hybrid per-segment
+    copies included; the whisper encoder (unpacked) keeps its weights."""
+    if _stacked_projections(params, cfg) is None:
         return params
-    names = set(projections)
+    paths = _packed_param_paths(cfg)
 
     def visit(path, leaf):
-        key = _key(path)
-        if any(key.endswith("/" + n) for n in names):
+        if _key(path) in paths:
             return jnp.zeros((leaf.shape[0], 1, 1), leaf.dtype)
         return leaf
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
-def reconstruct_stacked_params(params, tables: StackedKernelTables, cfg):
+def reconstruct_stacked_params(params, tables: SegmentedKernelTables, cfg):
     """Dense FTA reference weights: replace each packed projection in
     `params` with its unpacked (pruned + dequantized) stack, so the SAME
     plain-matmul forward reproduces what the joint kernels compute — the
     fp32-tolerance reference the stacked serving path is tested against.
     """
     from repro.kernels import ops
-    projections = _stacked_projections(params, cfg)
+    from repro.models.segments import decoder_layout, projection_param_path
+
+    segs = {s.name: s for s in decoder_layout(cfg)}
     recon = {}
-    for name, w in projections.items():
-        t = tables.arrays[name]
-        k, n, k_pad = tables.static[name]
-        if t["w_blocks"].ndim == 6:          # grouped (L, E, ...) experts
-            packed = ops.JointPackedGrouped(t["w_blocks"], t["idx"],
-                                            t["scales"], t["nblocks"],
-                                            k, n, k_pad)
-            dense = ops.unpack_joint_sparse_grouped(packed)
-        else:
-            packed = ops.JointPackedStacked(t["w_blocks"], t["idx"],
-                                            t["scales"], t["nblocks"],
-                                            k, n, k_pad)
-            dense = ops.unpack_joint_sparse_stacked(packed)
-        recon[name] = jnp.asarray(dense).astype(jnp.asarray(w).dtype)
+    for seg_name, seg_tables in tables.segments.items():
+        for name in seg_tables.arrays:
+            t = seg_tables.arrays[name]
+            k, n, k_pad = seg_tables.static[name]
+            if t["w_blocks"].ndim == 6:      # grouped (L, E, ...) experts
+                packed = ops.JointPackedGrouped(t["w_blocks"], t["idx"],
+                                                t["scales"], t["nblocks"],
+                                                k, n, k_pad)
+                dense = ops.unpack_joint_sparse_grouped(packed)
+            else:
+                packed = ops.JointPackedStacked(t["w_blocks"], t["idx"],
+                                                t["scales"], t["nblocks"],
+                                                k, n, k_pad)
+                dense = ops.unpack_joint_sparse_stacked(packed)
+            full_path = projection_param_path(segs[seg_name], name)
+            recon[full_path] = jnp.asarray(dense)
 
     def visit(path, leaf):
-        key = _key(path)
-        # longest suffix wins: arctic's "blocks/moe/w_up" matches both
-        # "moe/w_up" (experts) and the dense_mlp bare name "w_up" —
-        # specificity, not dict order, must pick the expert tensor
-        matches = [name for name in recon if key.endswith("/" + name)]
-        if matches:
-            return recon[max(matches, key=len)]
+        dense = recon.get(_key(path))
+        if dense is not None:
+            return dense.astype(leaf.dtype)
         return leaf
     return jax.tree_util.tree_map_with_path(visit, params)
 

@@ -109,16 +109,20 @@ def test_grouped_pack_rejects_bad_shapes():
 # ------------------------------------------------------- family gates -----
 
 def test_moe_family_gates():
-    """MoE joins the stacked-table families; chunked prefill stays gated
-    off (capacity dispatch is stepwise); hybrid stays fully unsupported."""
+    """Segmented per-kind scans closed the family matrix: every family
+    packs stacked tables (jamba included), and chunked prefill gates only
+    on sliding windows — arctic (no window, per-position capacity
+    dispatch) chunks; mixtral's reduced config keeps window=32 and stays
+    stepwise (ring-buffer writes need the sequential walk)."""
     mixtral = get_config("mixtral-8x7b", reduced=True)
     arctic = get_config("arctic-480b", reduced=True)
     jamba = get_config("jamba-v0.1-52b", reduced=True)
     assert mixtral.supports_stacked_tables
     assert arctic.supports_stacked_tables
+    assert jamba.supports_stacked_tables
     assert not mixtral.supports_chunked_prefill
-    assert not arctic.supports_chunked_prefill
-    assert not jamba.supports_stacked_tables
+    assert arctic.supports_chunked_prefill
+    assert jamba.supports_chunked_prefill
 
 
 # ------------------------------------- forward / decode vs reference ------

@@ -251,20 +251,28 @@ def test_joint_mode_changes_compiled_serving_graph():
     assert ratio <= 0.55, f"joint/dense weight traffic {ratio:.3f} > 0.55"
 
 
-def test_unsupported_families_fall_back_or_raise():
-    # hybrid (jamba) periods mix sublayer kinds inside one scan step —
-    # still no stacked path (MoE grew one in tests/test_moe_serving.py)
+def test_mismatched_tables_raise_instead_of_misserving():
+    """Every family packs now (segmented per-kind scans), so the guard
+    moved: tables packed for one segment layout must be rejected by a
+    model with a different one — a single-"blocks" tinyllama pack handed
+    to jamba's seg00..seg03 stack, or a pre-segmentation raw
+    StackedKernelTables object, would otherwise die as a cryptic scan
+    shape error deep inside the kernel."""
     cfg = get_config("jamba-v0.1-52b", reduced=True, dbpim_mode="joint")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    assert build_stacked_tables(params, cfg) is None
-    # passing tables to an unsupported forward/decode raises rather than
-    # mis-serving
+    jt = build_stacked_tables(params, cfg)
+    assert jt is not None and set(jt.segments) == \
+        {"seg00", "seg01", "seg02", "seg03"}
     cfg_t, params_t, tables = _setup("tinyllama-1.1b")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="segment layout"):
         decode_step(params, init_cache(cfg, 1, 8),
                     jnp.ones((1, 1), jnp.int32), cfg, tables=tables)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="segment layout"):
         forward(params, jnp.ones((1, 8), jnp.int32), cfg, tables=tables)
+    # a bare per-segment pack (no .segments) is not servable either
+    with pytest.raises(ValueError, match="segmented pack"):
+        forward(params_t, jnp.ones((1, 8), jnp.int32), cfg_t,
+                tables=tables.segments["blocks"])
 
 
 def test_serve_step_rejects_conflicting_weight_formats():
