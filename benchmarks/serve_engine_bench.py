@@ -28,7 +28,13 @@ Guards (raise -> CI fails):
      path at C=8 (the ~C x projection-read saving, measured not
      asserted);
   5. SPF mean TTFT <= FIFO mean TTFT on the bimodal workload, with the
-     no-starvation skip bound (skips <= spf_age_cap) intact.
+     no-starvation skip bound (skips <= spf_age_cap) intact;
+  6. a ZERO-fault FaultPlan leaves outputs and device-call count exactly
+     unchanged (the fault layer is free when idle);
+  7. under a seeded fault schedule containing every fault kind, every
+     completed request's tokens are BITWISE identical to the fault-free
+     run (recovery-by-replay), with >= 1 of each kind detected;
+  8. goodput under that schedule >= 0.9.
 
     PYTHONPATH=src python -m benchmarks.serve_engine_bench [--smoke] \
         [--out BENCH_serve_engine.json]
@@ -49,7 +55,8 @@ from repro.launch.steps import build_step
 from repro.models import init_cache, init_params
 from repro.models.ssm import PARALLEL_PREFILL_ATOL
 from repro.runtime.jaxpr_cost import analyze_call_kinds
-from repro.serving import ServeEngine, WorkloadSpec, make_trace
+from repro.serving import FaultPlan, ServeEngine, WorkloadSpec, make_trace
+from repro.serving.faults import FAULT_KINDS
 from repro.sparsity.sparse_linear import (build_stacked_tables,
                                           strip_packed_projections)
 from .common import emit
@@ -77,6 +84,19 @@ SCHED_SPEC = WorkloadSpec(n_requests=10, arrival_rate=2.0,
                           dist="bimodal", seed=13)
 SCHED_SLOTS = 2
 SPF_AGE_CAP = 4
+#: chaos case: a Poisson trace under an injected fault schedule. The
+#: arch is attention-family (tinyllama) so every prefill chunk —
+#: recovery replays included — is BITWISE identical to sequential
+#: decode, which is what makes the recovered-vs-fault-free equality an
+#: exact guard, not a tolerance. seed/rate are picked so the sampled
+#: plan contains every fault kind (asserted, so a regeneration that
+#: loses one fails loudly).
+CHAOS_SPEC = WorkloadSpec(n_requests=8, arrival_rate=0.8,
+                          prompt_len=(3, 18), gen_len=(4, 8),
+                          dist="uniform", seed=21)
+CHAOS_FAULT_SEED = 3
+CHAOS_FAULT_RATE = 0.2
+CHAOS_GOODPUT_MIN = 0.9
 
 
 def _mk_cache(cfg):
@@ -268,7 +288,12 @@ def bench_schedule(arch: str = "tinyllama-1.1b") -> dict:
         out[schedule] = {"ttft_ticks_mean": s["ttft_ticks_mean"],
                          "ttft_ticks_p95": s["ttft_ticks_p95"],
                          "n_completed": s["n_completed"],
-                         "max_skips": max(engine.skips.values(), default=0)}
+                         # skip entries are dropped at admission; the
+                         # final counts live in per-request metrics
+                         "max_skips": max(
+                             (r.skips
+                              for r in engine.metrics.requests.values()),
+                             default=0)}
         if s["n_completed"] != SCHED_SPEC.n_requests:
             raise RuntimeError(f"schedule={schedule}: only "
                                f"{s['n_completed']} of "
@@ -283,6 +308,111 @@ def bench_schedule(arch: str = "tinyllama-1.1b") -> dict:
             f"> cap {SPF_AGE_CAP} — starvation bound broken")
     out["pass"] = True
     return out
+
+
+def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
+    """Fault-tolerance guard (BENCH key ``chaos``): the same Poisson
+    trace runs fault-free, under a ZERO-fault plan, and under a seeded
+    fault schedule with every fault kind. Guards:
+
+      6. no-overhead-when-idle — the zero-fault plan's outputs AND
+         device-call count are exactly the fault-free run's;
+      7. bitwise recovery-by-replay — every request completed under
+         faults carries IDENTICAL generated tokens to the fault-free
+         run (the PR 3 chunk==decode invariant, weaponized as the
+         recovery mechanism), with >= 1 of each fault kind actually
+         landing (step exception, NaN logits, corrupted slot cache);
+      8. goodput (completed / submitted) >= CHAOS_GOODPUT_MIN under the
+         bench fault rate.
+    """
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint")
+    mesh = make_test_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    params = strip_packed_projections(params, cfg)
+    trace = make_trace(CHAOS_SPEC, cfg.vocab_size)
+
+    def run_once(plan):
+        engine = ServeEngine(cfg, params, mesh=mesh, n_slots=N_SLOTS,
+                             max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                             stacked_tables=tables, fault_plan=plan)
+        outputs = engine.run(trace)
+        return engine, outputs
+
+    ref_engine, ref_out = run_once(None)
+    ref_s = ref_engine.metrics.summary()
+
+    # guard 6: a zero-fault plan must be free
+    zero_engine, zero_out = run_once(FaultPlan.none())
+    zero_s = zero_engine.metrics.summary()
+    if zero_out != ref_out:
+        raise RuntimeError(f"{arch}: a ZERO-fault FaultPlan changed the "
+                           "generated tokens — the fault layer is not "
+                           "free when idle")
+    if zero_s["device_calls"] != ref_s["device_calls"]:
+        raise RuntimeError(
+            f"{arch}: a ZERO-fault FaultPlan changed the device-call "
+            f"count ({zero_s['device_calls']} vs "
+            f"{ref_s['device_calls']}) — the fault layer is not free")
+
+    # the schedule outlives the fault-free run: recovery replays stretch
+    # the faulted run past ref ticks, and faults must keep landing there
+    plan = FaultPlan.generate(seed=CHAOS_FAULT_SEED,
+                              n_ticks=2 * ref_s["engine_ticks"],
+                              rate=CHAOS_FAULT_RATE, n_slots=N_SLOTS)
+    missing = set(FAULT_KINDS) - {e.kind for e in plan.events}
+    if missing:
+        raise RuntimeError(f"chaos plan (seed={CHAOS_FAULT_SEED}) lost "
+                           f"fault kinds {missing} — re-pick the seed")
+    chaos_engine, chaos_out = run_once(plan)
+    s = chaos_engine.metrics.summary()
+
+    # guard 7: bitwise recovery + every fault kind actually landed
+    for rid, toks in chaos_out.items():
+        if chaos_engine.metrics.requests[rid].outcome == "done" \
+                and toks != ref_out[rid]:
+            raise RuntimeError(
+                f"{arch}: req{rid} recovered tokens differ from the "
+                f"fault-free run — recovery-by-replay is not bitwise")
+    detected = s["faults"]
+    for needed in ("step_exception", "cache_corruption",
+                   "nonfinite_logits"):
+        if detected.get(needed, 0) < 1:
+            raise RuntimeError(
+                f"{arch}: chaos run detected no {needed!r} fault "
+                f"(detected: {detected}) — the schedule missed a kind")
+
+    # guard 8: goodput under faults
+    if s["goodput"] < CHAOS_GOODPUT_MIN:
+        raise RuntimeError(
+            f"{arch}: chaos goodput {s['goodput']:.2f} < "
+            f"{CHAOS_GOODPUT_MIN} at fault rate {CHAOS_FAULT_RATE}")
+
+    return {
+        "arch": cfg.name, "n_slots": N_SLOTS, "max_len": MAX_LEN,
+        "prefill_chunk": PREFILL_CHUNK,
+        "workload": {"n_requests": CHAOS_SPEC.n_requests,
+                     "arrival_rate": CHAOS_SPEC.arrival_rate,
+                     "prompt_len": CHAOS_SPEC.prompt_len,
+                     "gen_len": CHAOS_SPEC.gen_len,
+                     "dist": CHAOS_SPEC.dist, "seed": CHAOS_SPEC.seed},
+        "fault_plan": {"seed": CHAOS_FAULT_SEED, "rate": CHAOS_FAULT_RATE,
+                       "n_events": len(plan.events),
+                       "by_kind": {k: sum(e.kind == k for e in plan.events)
+                                   for k in FAULT_KINDS}},
+        "goodput": s["goodput"],
+        "goodput_min": CHAOS_GOODPUT_MIN,
+        "bitwise_recovery": True,
+        "faults_detected": detected,
+        "retries": s["retries"], "replays": s["replays"],
+        "n_shed": s["n_shed"], "straggler_ticks": s["straggler_ticks"],
+        "calls_by_kind": s["calls_by_kind"],
+        "engine_ticks_fault_free": ref_s["engine_ticks"],
+        "engine_ticks_chaos": s["engine_ticks"],
+        "device_calls_fault_free": ref_s["device_calls"],
+        "device_calls_chaos": s["device_calls"],
+        "pass": True,
+    }
 
 
 def run(smoke: bool = False, out: str = "BENCH_serve_engine.json"):
@@ -310,10 +440,17 @@ def run(smoke: bool = False, out: str = "BENCH_serve_engine.json"):
         f"ttft_ticks fifo={sched['fifo']['ttft_ticks_mean']:.2f} "
         f"spf={sched['spf']['ttft_ticks_mean']:.2f} "
         f"max_skips={sched['spf']['max_skips']}/{SPF_AGE_CAP}"))
+    chaos = bench_chaos()
+    rows.append((
+        "serve_engine.chaos", 0.0,
+        f"goodput={chaos['goodput']:.2f} (min {CHAOS_GOODPUT_MIN}) "
+        f"faults={chaos['faults_detected']} replays={chaos['replays']} "
+        f"bitwise_recovery={chaos['bitwise_recovery']}"))
     emit(rows)
     payload = {"smoke": smoke, "archs": records, "schedule": sched,
+               "chaos": chaos,
                "pass": all(r["pass"] for r in records.values())
-               and sched["pass"]}
+               and sched["pass"] and chaos["pass"]}
     if out:
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)

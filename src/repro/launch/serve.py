@@ -27,6 +27,16 @@ stacked in/out projections per chunk instead of per token
 Load is a deterministic trace (serving.workload): Poisson arrivals at
 ``--arrival-rate`` requests/tick, prompt lengths from ``--prompt-len LO
 HI`` under ``--dist``, fixed ``--seed`` — no wall-clock in the trace.
+
+Fault tolerance / SLO (serving.faults, serving.engine): ``--fault-rate
+R`` injects a seeded fault schedule (step exceptions, NaN logits,
+corrupted slot caches) — faulted slots quarantine and recover by
+replaying their durable record, bitwise on exact prefill paths.
+``--deadline-slack K`` gives every request the SLO ``arrival + K``
+ticks; requests that can no longer meet it are shed (recorded, never
+raised), and ``--queue-cap`` bounds the admission queue with explicit
+load-shedding. ``--strict-admission`` restores the hard ValueError on
+oversized requests instead of a recorded rejection.
 """
 
 from __future__ import annotations
@@ -75,18 +85,36 @@ def build_engine_and_trace(args, cfg):
             0, 1, (args.batch, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
         enc_out = encode(params, frames, cfg)
 
+    fault_plan = None
+    if getattr(args, "fault_rate", 0.0) > 0:
+        from repro.serving import FaultPlan
+        fault_plan = FaultPlan.generate(
+            seed=args.fault_seed, n_ticks=args.fault_ticks,
+            rate=args.fault_rate, n_slots=args.batch)
+        print(f"[serve] fault plan: {len(fault_plan.events)} events over "
+              f"{args.fault_ticks} ticks (seed={args.fault_seed}, "
+              f"rate={args.fault_rate})")
+
     engine = ServeEngine(cfg, params, n_slots=args.batch,
                          max_len=args.max_len,
                          prefill_chunk=args.prefill_chunk,
                          prefill_mode=args.prefill_mode,
                          schedule=args.schedule,
                          spf_age_cap=args.spf_age_cap,
-                         stacked_tables=stacked_tables, enc_out=enc_out)
+                         stacked_tables=stacked_tables, enc_out=enc_out,
+                         strict=getattr(args, "strict_admission", False),
+                         queue_cap=getattr(args, "queue_cap", None),
+                         fault_plan=fault_plan,
+                         max_step_retries=getattr(args, "max_step_retries",
+                                                  2),
+                         max_replays=getattr(args, "max_replays", 3))
     spec = WorkloadSpec(n_requests=args.requests,
                         arrival_rate=args.arrival_rate,
                         prompt_len=tuple(args.prompt_len),
                         gen_len=(args.gen_len, args.gen_len),
-                        dist=args.dist, seed=args.seed)
+                        dist=args.dist, seed=args.seed,
+                        deadline_slack=getattr(args, "deadline_slack",
+                                               None))
     return engine, make_trace(spec, cfg.vocab_size)
 
 
@@ -119,6 +147,31 @@ def main(argv=None):
                          "before it becomes urgent")
     ap.add_argument("--prompt-len", type=int, nargs=2, default=[4, 24],
                     metavar=("LO", "HI"))
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="SLO: every request must complete within this "
+                         "many ticks of its arrival or be shed (recorded "
+                         "in metrics, never raised); default: no SLO")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue: submissions beyond the "
+                         "cap are rejected (recorded load-shedding)")
+    ap.add_argument("--strict-admission", action="store_true",
+                    help="raise ValueError on oversized requests instead "
+                         "of recording a rejection")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject a deterministic fault schedule: per-tick "
+                         "probability of one fault (step exception, NaN "
+                         "logits, or corrupted slot cache); faulted slots "
+                         "quarantine and recover by replay")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the injected fault schedule")
+    ap.add_argument("--fault-ticks", type=int, default=1000,
+                    help="horizon (ticks) the fault schedule covers")
+    ap.add_argument("--max-step-retries", type=int, default=2,
+                    help="bounded retry of a failed device call before "
+                         "every participating slot quarantines")
+    ap.add_argument("--max-replays", type=int, default=3,
+                    help="per-request fault budget: past it the request "
+                         "is shed instead of replayed again")
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="Poisson arrivals per engine tick (0 = all at t0)")
     ap.add_argument("--dist", default="uniform",
@@ -158,6 +211,11 @@ def main(argv=None):
         print(f"[serve] wall {s['wall_s']:.2f}s  "
               f"{s['tokens_per_sec']:.1f} tok/s  "
               f"{s['per_token_latency_ms']:.2f} ms/token")
+    if s["n_faults"] or s["n_rejected"] or s["n_shed"]:
+        print(f"[serve] goodput {s['goodput']:.2f}  faults {s['faults']}  "
+              f"retries {s['retries']}  replays {s['replays']}  "
+              f"rejected {s['n_rejected']}  shed {s['n_shed']}  "
+              f"straggler_ticks {s['straggler_ticks']}")
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:8]}...")
     return outputs

@@ -109,6 +109,16 @@ def _moment_specs(params, pspecs, moments, mesh):
 
 SERVE_CALL_KINDS = ("serve", "decode", "prefill_chunk")
 
+#: Call-kind tag suffix for RECOVERY traffic: the serving engine reuses
+#: the one compiled prefill executable for recovery-by-replay
+#: re-prefills (a faulted slot's durable record re-enters through the
+#: same fixed-shape chunk step — no extra compilation for the rare
+#: path), but meters those calls separately by suffixing the step's
+#: call_kind tag, e.g. "prefill_parallel+replay". Benchmarks multiply
+#: metrics.calls_by_kind["<kind>+replay"] by the per-call weight bytes
+#: of the base kind to price recovery overhead.
+REPLAY_TAG = "+replay"
+
 
 def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
                stacked_tables=None, int8_weights: bool = False):
@@ -143,6 +153,8 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
         models.ssm.prefill_ssm_parallel), "prefill_chunk_exact" when
         every segment's chunk math is bit-identical to sequential decode
         (attention chunks always are; SSM with cfg.prefill_exact).
+        Recovery-by-replay re-prefills run THIS executable too; the
+        engine meters them under "<call_kind>+replay" (REPLAY_TAG).
 
     stacked_tables (sparsity.sparse_linear.SegmentedKernelTables, from
     build_stacked_tables(params, cfg)): per-segment uniform-MAXB

@@ -17,6 +17,12 @@ framework's contract:
 
 The container is single-process, so failures are injected in tests via
 the `failure_hook`; the control flow is identical on real fleets.
+
+The SERVING engine has its own request-granular fault layer
+(serving.faults + serving.engine: per-slot quarantine and
+recovery-by-replay instead of checkpoint restore) but reuses
+`StragglerMonitor` verbatim for per-tick wall timing — outlier ticks
+surface as `straggler_ticks` in serving.metrics.summary().
 """
 
 from __future__ import annotations
@@ -32,17 +38,22 @@ import numpy as np
 class StragglerMonitor:
     window: int = 50
     threshold: float = 2.0          # x median => straggler
+    warmup: int = 10                # samples before flagging starts
     times: List[float] = field(default_factory=list)
+    flagged: int = 0                # total stragglers seen (monotonic)
 
     def record(self, dt: float) -> bool:
         """Returns True if this step is a straggler outlier."""
         self.times.append(dt)
         if len(self.times) > self.window:
             self.times.pop(0)
-        if len(self.times) < 10:
+        if len(self.times) < self.warmup:
             return False
         med = float(np.median(self.times))
-        return dt > self.threshold * med
+        if dt > self.threshold * med:
+            self.flagged += 1
+            return True
+        return False
 
     @property
     def p50(self) -> float:

@@ -1,6 +1,9 @@
-"""Request-level serving: engine, chunked prefill, load gen, metrics."""
+"""Request-level serving: engine, chunked prefill, load gen, metrics,
+deterministic fault injection."""
 
-from .engine import ServeEngine, SlotState  # noqa: F401
+from .engine import EngineStuckError, ServeEngine, SlotState  # noqa: F401
+from .faults import (FAULT_KINDS, FaultEvent, FaultPlan,  # noqa: F401
+                     InjectedFault)
 from .metrics import MetricsRecorder  # noqa: F401
 from .prefill import PREFILL_MODES, assemble_chunk  # noqa: F401
 from .workload import Request, WorkloadSpec, make_trace  # noqa: F401

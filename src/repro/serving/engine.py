@@ -40,18 +40,63 @@ Admission order (``schedule``):
     so skips <= spf_age_cap is a hard bound — no request is ever passed
     over by shortest-first picks more than ``spf_age_cap`` times, even
     when every request arrives at once — the invariant
-    tests/test_serving_engine.py holds the scheduler to.
+    tests/test_serving_engine.py holds the scheduler to. Admission is
+    O(arrived): the queue is arrival-sorted, so the arrived set is a
+    prefix, picks are index-based deque deletes within it, and a
+    request's skip entry is dropped the moment it is admitted (the
+    final count lands in metrics.requests[rid].skips).
 
 Per-slot cache positions: cache["pos"] is a (B,) vector — slots hold
 requests at different depths, which is what the vectorized
 decode_attention / decode_chunk paths exist for.
+
+Fault tolerance — the contract is **blast radius <= one tick, recovery
+bitwise-verifiable** (serving.faults is the injection harness that
+holds the engine to it; runtime.fault plays the same role for the
+training loop at checkpoint granularity):
+
+  * DETECTION — every device call runs under bounded retry
+    (``max_step_retries``); after the call, a finite-guard checks each
+    PARTICIPATING slot's logits row and fails only the offending slot
+    (non-finite logits are also how corrupted cache state surfaces —
+    NaN poison propagates to the slot's next logits, and only that
+    slot's, because the batch math is per-slot independent).
+  * CONTAINMENT — a faulted slot is QUARANTINED: its tick's token is
+    discarded, its cache slices are zeroed, and no other slot's stream
+    is touched. If a device call stays down past the retry budget,
+    every slot in that call quarantines — still one tick of blast
+    radius, per slot.
+  * RECOVERY-BY-REPLAY — the quarantined slot re-prefills from its
+    durable record (original prompt + tokens emitted so far). Chunked
+    prefill is bit-identical to sequential decode (the PR 3 invariant),
+    so the replayed cache — and every token after it — is BITWISE what
+    a fault-free run would have produced; the chaos benchmark asserts
+    exactly that. (On the SSM parallel-SSD prefill path the replay is
+    tolerance-equal like any other chunk; serve with
+    ``cfg.prefill_exact`` where bitwise recovery must hold.) A request
+    that faults more than ``max_replays`` times is shed
+    ("fault_budget") instead of livelocking — a deterministically-NaN
+    model converges to shedding, never to an infinite replay loop.
+  * SLO SHEDDING — requests carry an optional ``deadline`` tick. A
+    bounded queue (``queue_cap``) rejects at submit, hopeless queued
+    requests (optimistic completion estimate past the deadline) are
+    shed before ever taking a slot, and in-flight requests are
+    preempted the tick their deadline becomes unreachable. All of it is
+    RECORDED (metrics.on_reject / on_shed), never raised mid-trace.
+  * A zero-fault plan is free: no extra device calls, bitwise-identical
+    outputs (the chaos bench's no-overhead guard).
+
+Per-tick wall time feeds a runtime.fault.StragglerMonitor; outlier
+ticks are counted in metrics ("straggler_ticks").
 """
 
 from __future__ import annotations
 
 import enum
+import math
+import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -62,6 +107,8 @@ from repro.launch.mesh import make_test_mesh
 from repro.launch.steps import build_step
 from repro.models import init_cache, reset_slots
 from repro.runtime import sharding as shr
+from repro.runtime.fault import StragglerMonitor
+from repro.serving.faults import FaultPlan, corrupt_cache
 from repro.serving.metrics import MetricsRecorder
 from repro.serving.prefill import (PREFILL_MODES, assemble_chunk,
                                    build_chunk_step)
@@ -78,10 +125,16 @@ class SlotState(enum.Enum):
 class _Slot:
     state: SlotState = SlotState.FREE
     rid: Optional[int] = None
-    prompt: Optional[np.ndarray] = None
+    prompt: Optional[np.ndarray] = None  # current prefill target (replay
+    #                                      record after a fault)
+    durable: Optional[np.ndarray] = None  # original prompt, never mutated
     cursor: int = 0                      # prompt tokens already in cache
     gen_len: int = 0
     pending_token: int = 0               # next decode input
+    deadline: Optional[float] = None
+    fault_count: int = 0                 # quarantines charged to this slot
+    replay: bool = False                 # prefilling a post-fault record
+    #                                      (suppress first-token metrics)
 
 
 @dataclass
@@ -92,6 +145,20 @@ class SlotInterval:
     rid: int
     admit_tick: int
     release_tick: Optional[int] = None
+
+
+class EngineStuckError(RuntimeError):
+    """max_ticks exceeded — the scheduler wedged. Carries everything a
+    post-mortem needs: completed outputs so far, the slot audit log, and
+    the metrics summary (the bare RuntimeError used to discard all
+    three)."""
+
+    def __init__(self, msg: str, *, outputs: Dict[int, List[int]],
+                 slot_log: List[SlotInterval], summary: dict):
+        super().__init__(msg)
+        self.outputs = outputs
+        self.slot_log = slot_log
+        self.summary = summary
 
 
 class ServeEngine:
@@ -109,7 +176,10 @@ class ServeEngine:
                  max_len: int = 64, prefill_chunk: int = 16,
                  prefill_mode: str = "chunked", schedule: str = "fifo",
                  spf_age_cap: int = 8, stacked_tables=None,
-                 enc_out=None, max_ticks: int = 100_000):
+                 enc_out=None, max_ticks: int = 100_000,
+                 strict: bool = False, queue_cap: Optional[int] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_step_retries: int = 2, max_replays: int = 3):
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
                              f"{PREFILL_MODES}")
@@ -131,6 +201,11 @@ class ServeEngine:
         self.schedule = schedule
         self.spf_age_cap = spf_age_cap
         self.max_ticks = max_ticks
+        self.strict = strict
+        self.queue_cap = queue_cap
+        self.fault_plan = fault_plan
+        self.max_step_retries = max_step_retries
+        self.max_replays = max_replays
 
         self.params = params
         with self.mesh:
@@ -169,30 +244,55 @@ class ServeEngine:
                              if self._prefill is not None else None)
 
         self.queue: deque = deque()
-        self.skips: Dict[int, int] = {}   # rid -> times queue-jumped (spf)
+        self.skips: Dict[int, int] = {}   # QUEUED rid -> times jumped (spf);
+        #                                   entries die at admission
         self.slots = [_Slot() for _ in range(n_slots)]
         self.tick_count = 0
         self.outputs: Dict[int, List[int]] = {}
         self.first_logits: Dict[int, np.ndarray] = {}
+        self.rejected: Dict[int, str] = {}   # rid -> rejection reason
         self.slot_log: List[SlotInterval] = []
         self._open_interval: Dict[int, SlotInterval] = {}
+        self._has_deadlines = False
+        self.straggler = StragglerMonitor()
         self.metrics = MetricsRecorder()
 
     # ------------------------------------------------------------------ API
 
-    def submit(self, request: Request):
+    def submit(self, request: Request) -> bool:
+        """Queue a request; returns False if it was REJECTED instead
+        (oversized, or the bounded queue is full). Rejections are
+        recorded (metrics.on_reject, ``self.rejected``), never raised —
+        one malformed request must not abort a whole trace. Construct
+        the engine with ``strict=True`` to get the hard ValueError back
+        for oversized requests (tests / offline traces)."""
         total = request.prompt_len + request.gen_len
         if total > self.max_len:
-            raise ValueError(
-                f"request {request.rid}: prompt {request.prompt_len} + "
-                f"gen {request.gen_len} exceeds max_len {self.max_len}")
+            if self.strict:
+                raise ValueError(
+                    f"request {request.rid}: prompt {request.prompt_len} + "
+                    f"gen {request.gen_len} exceeds max_len {self.max_len}")
+            return self._reject(request, "oversized")
+        if self.queue_cap is not None and len(self.queue) >= self.queue_cap:
+            return self._reject(request, "queue_full")
         self.queue.append(request)
         self.skips[request.rid] = 0
+        if request.deadline is not None:
+            self._has_deadlines = True
         self.metrics.on_submit(request.rid, request.prompt_len,
                                request.gen_len, request.arrival)
+        return True
+
+    def _reject(self, request: Request, reason: str) -> bool:
+        self.rejected[request.rid] = reason
+        self.metrics.on_reject(request.rid, request.prompt_len,
+                               request.gen_len, request.arrival, reason)
+        return False
 
     def run(self, requests: List[Request]):
-        """Serve a trace to completion; returns {rid: generated tokens}."""
+        """Serve a trace to completion; returns {rid: generated tokens}
+        for every request that held a slot (rejected ones appear in
+        ``self.rejected`` / metrics instead)."""
         for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             self.submit(r)
         self.metrics.start()
@@ -200,16 +300,26 @@ class ServeEngine:
                                 for s in self.slots):
             self.tick()
             if self.tick_count > self.max_ticks:
-                raise RuntimeError(f"engine exceeded max_ticks="
-                                   f"{self.max_ticks}; scheduler stuck?")
+                self.metrics.stop()
+                raise EngineStuckError(
+                    f"engine exceeded max_ticks={self.max_ticks}; "
+                    f"scheduler stuck?",
+                    outputs=dict(self.outputs),
+                    slot_log=list(self.slot_log),
+                    summary=self.metrics.summary())
         self.metrics.stop()
         return self.outputs
 
     # ------------------------------------------------------------- one tick
 
     def tick(self):
+        t0 = time.monotonic()
         tick = self.tick_count
         calls = 0
+        if self.fault_plan is not None:
+            self._inject_cache_faults(tick)
+        if self._has_deadlines:
+            self._shed_hopeless_slots(tick)
         self._admit(tick)
         if self.prefill_mode == "chunked":
             calls += self._prefill_phase(tick)
@@ -223,6 +333,8 @@ class ServeEngine:
                            for s in self.slots),
             device_calls=calls)
         self.tick_count += 1
+        if self.straggler.record(time.monotonic() - t0):
+            self.metrics.on_straggler(tick)
 
     # -------------------------------------------------------------- phases
 
@@ -236,30 +348,40 @@ class ServeEngine:
         is not a jump). Since a non-urgent pick requires the urgent set
         to be empty, a request at the cap can never be incremented
         again: skips[rid] <= spf_age_cap always, and deferral is bounded
-        even when all requests arrive simultaneously."""
-        arrived = [r for r in self.queue if r.arrival <= tick]
-        if not arrived:                   # queue is arrival-sorted
+        even when all requests arrive simultaneously.
+
+        The queue is arrival-sorted, so the arrived set is a PREFIX:
+        one O(arrived) scan finds the pick's index and the deque delete
+        shifts at most that prefix — no full-queue equality scan."""
+        arrived = []
+        for i, r in enumerate(self.queue):
+            if r.arrival > tick:
+                break
+            arrived.append((i, r))
+        if not arrived:
             return None
         if self.schedule == "fifo":
-            req = arrived[0]
+            idx, req = arrived[0]
         else:
-            urgent = [r for r in arrived
+            urgent = [(i, r) for i, r in arrived
                       if self.skips[r.rid] >= self.spf_age_cap]
             if urgent:
-                req = urgent[0]           # oldest urgent arrival
+                idx, req = urgent[0]      # oldest urgent arrival
             else:
-                req = min(arrived,
-                          key=lambda r: (r.prompt_len, r.arrival, r.rid))
-                for r in arrived:
+                idx, req = min(arrived, key=lambda ir: (
+                    ir[1].prompt_len, ir[1].arrival, ir[1].rid))
+                for _, r in arrived:
                     if r is not req:
                         self.skips[r.rid] += 1
-        self.queue.remove(req)
+        del self.queue[idx]
         return req
 
     def _admit(self, tick: int):
         """QUEUED -> PREFILLING: pop arrived requests into free slots and
         ZERO the slots' stale cache slices (the previous occupant's
         KV/SSM state must not leak into the new request)."""
+        if self._has_deadlines:
+            self._shed_hopeless_queue(tick)
         mask = np.zeros((self.n_slots,), bool)
         for s, slot in enumerate(self.slots):
             if slot.state is not SlotState.FREE:
@@ -267,15 +389,14 @@ class ServeEngine:
             req = self._pop_next(tick)
             if req is None:
                 break
-            slot.state = SlotState.PREFILLING
-            slot.rid = req.rid
-            slot.prompt = np.asarray(req.prompt, np.int32)
-            slot.cursor = 0
-            slot.gen_len = req.gen_len
-            slot.pending_token = 0
+            prompt = np.asarray(req.prompt, np.int32)
+            self.slots[s] = _Slot(
+                state=SlotState.PREFILLING, rid=req.rid, prompt=prompt,
+                durable=prompt, gen_len=req.gen_len, deadline=req.deadline)
             mask[s] = True
             self.outputs[req.rid] = []
-            self.metrics.on_admit(req.rid, tick)
+            self.metrics.on_admit(req.rid, tick,
+                                  skips=self.skips.pop(req.rid, 0))
             iv = SlotInterval(slot=s, rid=req.rid, admit_tick=tick)
             self.slot_log.append(iv)
             self._open_interval[s] = iv
@@ -290,20 +411,31 @@ class ServeEngine:
         cursors = {s: self.slots[s].cursor for s in prefilling}
         tokens, n_valid = assemble_chunk(prefilling, cursors, self.n_slots,
                                          self.prefill_chunk)
-        logits, self.cache = self._prefill(self.params, self.cache,
-                                           jnp.asarray(tokens),
-                                           jnp.asarray(n_valid))
-        self.metrics.on_device_call("prefill")
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        res = self._device_call("prefill", self._prefill, self.params,
+                                self.cache, jnp.asarray(tokens),
+                                jnp.asarray(n_valid))
+        if res is None:                   # persistent step failure:
+            for s in prefilling:          # quarantine every participant
+                self._quarantine(s, tick, "step_exception")
+            return 0
+        logits, self.cache = res
+        self.metrics.on_device_call(
+            "prefill", kind=self.prefill_kind,
+            replay=any(self.slots[s].replay for s in prefilling))
+        lg = self._host_logits(logits, tick, "prefill")
+        nxt = lg.argmax(axis=-1)
         for s in prefilling:
+            if not np.isfinite(lg[s]).all():
+                self._quarantine(s, tick, "nonfinite_logits")
+                continue
             slot = self.slots[s]
             slot.cursor += int(n_valid[s])
             self.metrics.on_prefill_step(slot.rid)
             if slot.cursor >= len(slot.prompt):
                 # the chunk containing the last prompt token yields the
                 # first generated token — TTFT lands here
-                self._emit_first_token(s, int(nxt[s]),
-                                       np.asarray(logits[s]), tick)
+                self._finish_prefill(s, int(nxt[s]),
+                                     np.asarray(logits[s]), tick)
         return 1
 
     def _decode_phase(self, tick: int) -> int:
@@ -319,20 +451,30 @@ class ServeEngine:
                 active[s] = True
         if not active.any():
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(active))
-        self.metrics.on_device_call("decode")
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        res = self._device_call("decode", self._decode, self.params,
+                                self.cache, jnp.asarray(tokens),
+                                jnp.asarray(active))
+        if res is None:
+            for s in range(self.n_slots):
+                if active[s]:
+                    self._quarantine(s, tick, "step_exception")
+            return 0
+        logits, self.cache = res
+        self.metrics.on_device_call("decode", kind="decode")
+        lg = self._host_logits(logits, tick, "decode")
+        nxt = lg.argmax(axis=-1)
         for s, slot in enumerate(self.slots):
             if not active[s]:
+                continue
+            if not np.isfinite(lg[s]).all():
+                self._quarantine(s, tick, "nonfinite_logits")
                 continue
             if slot.state is SlotState.PREFILLING:
                 slot.cursor += 1
                 self.metrics.on_prefill_step(slot.rid)
                 if slot.cursor >= len(slot.prompt):
-                    self._emit_first_token(s, int(nxt[s]),
-                                           np.asarray(logits[s]), tick)
+                    self._finish_prefill(s, int(nxt[s]),
+                                         np.asarray(logits[s]), tick)
                 continue
             tok = int(nxt[s])
             self.outputs[slot.rid].append(tok)
@@ -342,24 +484,160 @@ class ServeEngine:
                 self._release(s, tick)
         return 1
 
+    # ----------------------------------------------- fault containment ----
+
+    def _device_call(self, call: str, fn, *args):
+        """Run a device call under the fault contract: injected or real
+        exceptions get ``max_step_retries`` re-issues (the injection
+        layer raises BEFORE dispatch, so the donated cache buffer is
+        intact for the retry); past the budget, returns None and the
+        caller quarantines every participating slot. With no fault plan
+        installed, real exceptions propagate unchanged — containment
+        must never hide a programming error in a plain run."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault_plan is not None:
+                    self.fault_plan.check_step(self.tick_count, call,
+                                               attempt)
+                return fn(*args)
+            except Exception as e:  # noqa: BLE001 — any step failure
+                if self.fault_plan is None:
+                    raise
+                self.metrics.on_fault("step_exception", None,
+                                      self.tick_count)
+                attempt += 1
+                if attempt > self.max_step_retries:
+                    return None
+                self.metrics.on_retry(call)
+
+    def _host_logits(self, logits, tick: int, call: str) -> np.ndarray:
+        """Host-side (B, V) f32 logits for argmax + the finite-guard;
+        the fault plan's nan_logits events poison rows here (the
+        corruption a real device would hand back)."""
+        lg = np.asarray(logits[:, 0, :], np.float32)
+        if self.fault_plan is not None:
+            bad = self.fault_plan.logit_slots(tick, call)
+            if bad:
+                lg = lg.copy()
+                for s in bad:
+                    lg[s] = np.nan
+        return lg
+
+    def _inject_cache_faults(self, tick: int):
+        slots = [s for s in self.fault_plan.cache_slots(tick)
+                 if self.slots[s].state is not SlotState.FREE]
+        if not slots:
+            return
+        self.cache = corrupt_cache(self.cache, slots, self.n_slots,
+                                   self.cfg)
+        for s in slots:
+            self.metrics.on_fault("cache_corruption", self.slots[s].rid,
+                                  tick)
+
+    def _quarantine(self, s: int, tick: int, kind: str):
+        """Contain a fault to slot ``s`` and schedule recovery-by-replay:
+        zero the slot's cache and re-prefill its durable record (prompt +
+        tokens emitted so far). Because chunked prefill == sequential
+        decode, the replayed stream continues bitwise as if the fault
+        never happened. Past ``max_replays`` the request is shed
+        ("fault_budget") — a slot that faults deterministically must
+        converge to shedding, not livelock."""
+        slot = self.slots[s]
+        rid = slot.rid
+        self.metrics.on_fault(kind, rid, tick)
+        slot.fault_count += 1
+        if slot.fault_count > self.max_replays:
+            self.metrics.on_shed(rid, tick, "fault_budget")
+            self._close_interval(s, tick)
+            self.slots[s] = _Slot()
+            return
+        self.metrics.on_replay(rid)
+        emitted = self.outputs[rid]
+        record = (np.concatenate([slot.durable,
+                                  np.asarray(emitted, np.int32)])
+                  if emitted else slot.durable)
+        slot.prompt = record
+        slot.cursor = 0
+        slot.pending_token = 0
+        slot.replay = bool(emitted)
+        slot.state = SlotState.PREFILLING
+        mask = np.zeros((self.n_slots,), bool)
+        mask[s] = True
+        self.cache = self._reset(self.cache, jnp.asarray(mask))
+
+    # ------------------------------------------------------ SLO shedding --
+
+    def _min_ticks_to_done(self, prompt_left: int, gen_left: int) -> int:
+        """OPTIMISTIC ticks (including the current one) until the
+        request finishes: the last prefill chunk emits the first of the
+        remaining tokens, then one token per tick. A lower bound, so a
+        request is only ever shed when its deadline is provably
+        unreachable."""
+        if prompt_left > 0:
+            chunks = (math.ceil(prompt_left / self.prefill_chunk)
+                      if self.prefill_mode == "chunked" else prompt_left)
+            return chunks + max(gen_left - 1, 0)
+        return max(gen_left, 1)
+
+    def _shed_hopeless_queue(self, tick: int):
+        """Drop arrived queued requests whose deadline is unreachable
+        even if admitted RIGHT NOW — load shedding before they waste a
+        slot. O(arrived): the arrived prefix is popped, filtered, and
+        pushed back."""
+        kept = []
+        while self.queue and self.queue[0].arrival <= tick:
+            r = self.queue.popleft()
+            est = self._min_ticks_to_done(r.prompt_len, r.gen_len)
+            if r.deadline is not None and tick + est - 1 > r.deadline:
+                self.skips.pop(r.rid, None)
+                self.metrics.on_shed(r.rid, tick, "deadline")
+            else:
+                kept.append(r)
+        self.queue.extendleft(reversed(kept))
+
+    def _shed_hopeless_slots(self, tick: int):
+        """Preempt in-flight requests the tick their deadline becomes
+        unreachable — the slot is worth more to the queue than to a
+        request that can no longer meet its SLO."""
+        for s, slot in enumerate(self.slots):
+            if slot.state is SlotState.FREE or slot.deadline is None:
+                continue
+            gen_left = slot.gen_len - len(self.outputs[slot.rid])
+            prompt_left = (len(slot.prompt) - slot.cursor
+                           if slot.state is SlotState.PREFILLING else 0)
+            if tick + self._min_ticks_to_done(prompt_left, gen_left) - 1 \
+                    > slot.deadline:
+                self.metrics.on_shed(slot.rid, tick, "deadline")
+                self._close_interval(s, tick)
+                self.slots[s] = _Slot()   # cache zeroed at next admit
+
     # ------------------------------------------------------------- helpers
 
-    def _emit_first_token(self, s: int, token: int, logits: np.ndarray,
-                          tick: int):
+    def _finish_prefill(self, s: int, token: int, logits: np.ndarray,
+                        tick: int):
         slot = self.slots[s]
         slot.state = SlotState.DECODING
         slot.pending_token = token
         self.outputs[slot.rid].append(token)
-        self.first_logits[slot.rid] = logits
-        self.metrics.on_first_token(slot.rid, tick)
+        if not slot.replay:
+            # a replayed record's final chunk yields the NEXT token of an
+            # already-started stream, not the request's first — TTFT and
+            # first_logits were recorded before the fault
+            self.first_logits[slot.rid] = logits
+            self.metrics.on_first_token(slot.rid, tick)
+        slot.replay = False
         self.metrics.on_token(slot.rid)
-        if slot.gen_len <= 1:
+        if len(self.outputs[slot.rid]) >= slot.gen_len:
             self._release(s, tick)
+
+    def _close_interval(self, s: int, tick: int):
+        iv = self._open_interval.pop(s, None)
+        if iv is not None:
+            iv.release_tick = tick + 1
 
     def _release(self, s: int, tick: int):
         slot = self.slots[s]
         self.metrics.on_done(slot.rid, tick)
-        iv = self._open_interval.pop(s, None)
-        if iv is not None:
-            iv.release_tick = tick + 1
+        self._close_interval(s, tick)
         self.slots[s] = _Slot()           # FREE; cache zeroed at next admit

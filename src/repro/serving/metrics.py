@@ -27,6 +27,14 @@ class RequestMetrics:
     first_token_tick: Optional[int] = None
     done_tick: Optional[int] = None
     prefill_steps: int = 0            # device calls spent filling the cache
+    skips: int = 0                    # times queue-jumped before admission
+    faults: int = 0                   # faults charged to this request
+    replays: int = 0                  # recovery-by-replay re-prefills
+    #: terminal outcome: "done", "rejected" (refused at submit),
+    #: "shed" (dropped after acceptance — deadline or fault budget);
+    #: None while queued / in flight
+    outcome: Optional[str] = None
+    reason: Optional[str] = None      # rejected/shed: why
 
     @property
     def ttft_ticks(self) -> Optional[int]:
@@ -54,6 +62,17 @@ class MetricsRecorder:
         self.decode_calls = 0
         self.prefill_calls = 0
         self.generated_tokens = 0
+        # fault-tolerance counters (serving.faults / engine containment)
+        self.faults: Dict[str, int] = {}        # fault kind -> count
+        self.retries = 0                        # re-issued device calls
+        self.replays = 0                        # recovery-by-replay resets
+        self.rejected = 0                       # refused at submit
+        self.shed = 0                           # dropped after acceptance
+        self.straggler_ticks = 0                # wall-time outlier ticks
+        #: device calls by the step's call_kind tag; replay prefills are
+        #: tagged "<kind>+replay" so recovery traffic is attributable
+        #: (launch.steps.build_step call_kind contract)
+        self.calls_by_kind: Dict[str, int] = {}
         self._t0: Optional[float] = None
         self._wall: float = 0.0
 
@@ -75,8 +94,9 @@ class MetricsRecorder:
         self.requests[rid] = RequestMetrics(
             rid=rid, prompt_len=prompt_len, gen_len=gen_len, arrival=arrival)
 
-    def on_admit(self, rid, tick):
+    def on_admit(self, rid, tick, skips: int = 0):
         self.requests[rid].admitted_tick = tick
+        self.requests[rid].skips = skips
 
     def on_prefill_step(self, rid):
         self.requests[rid].prefill_steps += 1
@@ -89,17 +109,61 @@ class MetricsRecorder:
 
     def on_done(self, rid, tick):
         self.requests[rid].done_tick = tick
+        self.requests[rid].outcome = "done"
 
     def on_tick(self, tick, queue_depth, n_prefilling, n_decoding,
                 device_calls):
         self.ticks.append(TickMetrics(tick, queue_depth, n_prefilling,
                                       n_decoding, device_calls))
 
-    def on_device_call(self, kind: str):
-        if kind == "decode":
+    def on_device_call(self, call: str, kind: Optional[str] = None,
+                       replay: bool = False):
+        """``call`` is the engine phase ("decode" | "prefill");
+        ``kind`` the compiled step's call_kind tag, suffixed "+replay"
+        when the batch carries a recovering slot."""
+        if call == "decode":
             self.decode_calls += 1
-        elif kind == "prefill":
+        elif call == "prefill":
             self.prefill_calls += 1
+        tag = kind or call
+        if replay:
+            from repro.launch.steps import REPLAY_TAG
+            tag += REPLAY_TAG
+        self.calls_by_kind[tag] = self.calls_by_kind.get(tag, 0) + 1
+
+    # -- fault-tolerance events --------------------------------------------
+    def on_reject(self, rid, prompt_len, gen_len, arrival, reason: str):
+        """A request refused at submit: recorded, never admitted. The
+        row exists so ``n_requests`` still counts every submission and
+        results can report the rejection."""
+        r = RequestMetrics(rid=rid, prompt_len=prompt_len, gen_len=gen_len,
+                           arrival=arrival)
+        r.outcome, r.reason = "rejected", reason
+        self.requests[rid] = r
+        self.rejected += 1
+
+    def on_shed(self, rid, tick, reason: str):
+        """A request dropped AFTER acceptance — its deadline became
+        unreachable or it exhausted the per-request fault budget."""
+        r = self.requests[rid]
+        r.outcome, r.reason = "shed", reason
+        r.done_tick = None
+        self.shed += 1
+
+    def on_fault(self, kind: str, rid: Optional[int], tick: int):
+        self.faults[kind] = self.faults.get(kind, 0) + 1
+        if rid is not None and rid in self.requests:
+            self.requests[rid].faults += 1
+
+    def on_retry(self, call: str):
+        self.retries += 1
+
+    def on_replay(self, rid):
+        self.replays += 1
+        self.requests[rid].replays += 1
+
+    def on_straggler(self, tick):
+        self.straggler_ticks += 1
 
     # -- summaries ---------------------------------------------------------
     def summary(self) -> dict:
@@ -132,10 +196,23 @@ class MetricsRecorder:
         toks = self.generated_tokens
         calls = max(self.device_calls, 1)
         qd = [t.queue_depth for t in self.ticks]
+        n_completed = sum(r.done_tick is not None
+                          for r in self.requests.values())
         return {
             "n_requests": len(self.requests),
-            "n_completed": sum(r.done_tick is not None
-                               for r in self.requests.values()),
+            "n_completed": n_completed,
+            # fault-tolerance block: what went wrong and what it cost.
+            # goodput is the serving-under-faults headline — completed
+            # over EVERY submission, rejected and shed included.
+            "n_rejected": self.rejected,
+            "n_shed": self.shed,
+            "faults": dict(self.faults),
+            "n_faults": sum(self.faults.values()),
+            "retries": self.retries,
+            "replays": self.replays,
+            "straggler_ticks": self.straggler_ticks,
+            "calls_by_kind": dict(self.calls_by_kind),
+            "goodput": n_completed / max(len(self.requests), 1),
             "ttft_n": len(ttfts),
             "n_no_first_token": len(self.requests) - len(ttfts),
             "generated_tokens": toks,
@@ -170,5 +247,10 @@ class MetricsRecorder:
                 "done_tick": r.done_tick,
                 "ttft_ticks": r.ttft_ticks,
                 "prefill_steps": r.prefill_steps,
+                "skips": r.skips,
+                "faults": r.faults,
+                "replays": r.replays,
+                "outcome": r.outcome,
+                "reason": r.reason,
             })
         return out

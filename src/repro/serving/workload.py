@@ -13,7 +13,7 @@ use to keep architecture comparisons honest.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -22,11 +22,16 @@ import numpy as np
 class Request:
     """One serving request. ``arrival`` is in engine ticks (no wall
     clock); the engine admits the request at the first tick >= arrival
-    with a free slot."""
+    with a free slot. ``deadline`` (also in ticks) is the SLO: the
+    request must be DONE by that tick or the engine sheds it — queued
+    requests whose optimistic completion estimate already overshoots are
+    dropped without ever occupying a slot, in-flight ones are preempted
+    the tick the deadline becomes unreachable. None = no SLO."""
     rid: int
     prompt: Tuple[int, ...]            # prompt token ids, len >= 1
     gen_len: int                       # tokens to generate after prefill
     arrival: float = 0.0
+    deadline: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -44,13 +49,16 @@ class WorkloadSpec:
       * "fixed":     every prompt is exactly hi.
 
     ``arrival_rate`` is requests per engine tick (Poisson); 0 puts every
-    arrival at tick 0 (closed-loop batch)."""
+    arrival at tick 0 (closed-loop batch). ``deadline_slack`` (ticks)
+    gives every request the SLO ``deadline = arrival + deadline_slack``;
+    None (default) disables deadlines entirely."""
     n_requests: int = 8
     arrival_rate: float = 0.5
     prompt_len: Tuple[int, int] = (4, 24)
     gen_len: Tuple[int, int] = (4, 12)
     dist: str = "uniform"
     seed: int = 0
+    deadline_slack: Optional[float] = None
 
 
 def _sample_len(rng, lo: int, hi: int, dist: str) -> int:
@@ -76,5 +84,8 @@ def make_trace(spec: WorkloadSpec, vocab_size: int) -> List[Request]:
         prompt = tuple(int(x) for x in
                        rng.integers(1, vocab_size, size=max(plen, 1)))
         out.append(Request(rid=rid, prompt=prompt, gen_len=max(glen, 1),
-                           arrival=t))
+                           arrival=t,
+                           deadline=(t + spec.deadline_slack
+                                     if spec.deadline_slack is not None
+                                     else None)))
     return out

@@ -1,0 +1,295 @@
+"""Fault-tolerant serving: the blast-radius / bitwise-recovery contract.
+
+Fast lane (pytest -m fault_tolerance): unit tests for the injection
+harness (serving.faults — deterministic schedules, event validation),
+the shared runtime fault primitives (StragglerMonitor,
+ElasticMeshPlan), and engine-level containment on a tiny reduced
+config: a zero-fault plan is free, every fault kind is detected and
+contained to its slot, recovery-by-replay reproduces the fault-free
+token stream bitwise, the per-request fault budget converges to
+shedding, and SLO deadlines shed both queued and in-flight requests.
+benchmarks/serve_engine_bench.py holds the same contract at workload
+scale (BENCH key ``chaos``)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime.fault import ElasticMeshPlan, StragglerMonitor
+from repro.serving import (EngineStuckError, Request, ServeEngine,
+                           WorkloadSpec, make_trace)
+from repro.serving.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                                  InjectedFault)
+
+pytestmark = pytest.mark.fault_tolerance
+
+
+# ------------------------------------------------ runtime primitives ----
+
+def test_straggler_monitor_warmup_then_flags_outliers():
+    m = StragglerMonitor(window=10, threshold=2.0, warmup=5)
+    for _ in range(4):
+        assert not m.record(0.01)
+    # 5th sample reaches warmup: 1.0 >> 2 x median(0.01...) -> straggler
+    assert m.record(1.0)
+    assert m.flagged == 1
+    assert not m.record(0.01)
+    assert m.flagged == 1
+
+
+def test_straggler_monitor_no_flag_during_warmup():
+    m = StragglerMonitor(warmup=10)
+    for _ in range(3):
+        m.record(0.01)
+    assert not m.record(5.0)          # would be an outlier, still warming up
+    assert m.flagged == 0
+
+
+def test_straggler_monitor_window_bound():
+    m = StragglerMonitor(window=10)
+    for _ in range(25):
+        m.record(0.01)
+    assert len(m.times) == 10
+
+
+def test_elastic_mesh_plan_degrades_data_parallel_only():
+    plan = ElasticMeshPlan(data_parallel=4, model_parallel=2)
+    d = plan.degrade()
+    assert (d.data_parallel, d.model_parallel) == (2, 2)
+    d = d.degrade()
+    assert (d.data_parallel, d.model_parallel) == (1, 2)
+    with pytest.raises(RuntimeError):
+        d.degrade()
+
+
+# ------------------------------------------------- injection harness ----
+
+def test_fault_plan_generate_is_deterministic():
+    """Same seed + parameters => bit-identical schedule; a different
+    seed diverges (the reproducibility contract the chaos bench rests
+    on)."""
+    kw = dict(n_ticks=200, rate=0.3, n_slots=4)
+    a = FaultPlan.generate(seed=5, **kw)
+    b = FaultPlan.generate(seed=5, **kw)
+    assert a == b and a.events == b.events
+    assert len(a.events) > 0
+    assert FaultPlan.generate(seed=6, **kw) != a
+    for e in a.events:
+        assert e.kind in FAULT_KINDS
+        assert 0 <= e.slot < 4 and 0 <= e.tick < 200
+
+
+def test_fault_event_validates_kind_and_call():
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="nan_logits", call="embed")
+
+
+def test_check_step_honors_repeat_and_call_scope():
+    plan = FaultPlan(events=(
+        FaultEvent(tick=3, kind="step_exception", call="decode", repeat=2),))
+    with pytest.raises(InjectedFault):
+        plan.check_step(3, "decode", attempt=0)
+    with pytest.raises(InjectedFault):
+        plan.check_step(3, "decode", attempt=1)
+    plan.check_step(3, "decode", attempt=2)     # repeat budget exhausted
+    plan.check_step(3, "prefill", attempt=0)    # other call untouched
+    plan.check_step(2, "decode", attempt=0)     # other tick untouched
+
+
+def test_slot_queries_scope_by_tick_and_call():
+    plan = FaultPlan(events=(
+        FaultEvent(tick=1, kind="nan_logits", call="decode", slot=2),
+        FaultEvent(tick=1, kind="cache_corruption", slot=3),))
+    assert plan.logit_slots(1, "decode") == [2]
+    assert plan.logit_slots(1, "prefill") == []
+    assert plan.logit_slots(0, "decode") == []
+    assert plan.cache_slots(1) == [3]
+    assert plan.cache_slots(2) == []
+    assert FaultPlan.none().events == ()
+
+
+# --------------------------------------------------- engine containment --
+
+SPEC = WorkloadSpec(n_requests=4, arrival_rate=0.0, prompt_len=(3, 8),
+                    gen_len=(3, 5), dist="uniform", seed=11)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("tinyllama-1.1b", reduced=True).scaled(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(SPEC, cfg.vocab_size)
+    return cfg, params, trace
+
+
+def _run(served, plan, **kw):
+    cfg, params, trace = served
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=24, prefill_chunk=4,
+                      fault_plan=plan, **kw)
+    return eng, eng.run(trace)
+
+
+@pytest.fixture(scope="module")
+def ref(served):
+    eng, out = _run(served, None)
+    return eng.metrics.summary(), out
+
+
+def test_zero_fault_plan_is_free(served, ref):
+    """The ISSUE's no-overhead guard: an engine driven by an EMPTY fault
+    plan produces bitwise the outputs of one with no plan at all, with
+    the exact same device-call count."""
+    ref_s, ref_out = ref
+    eng, out = _run(served, FaultPlan.none())
+    assert out == ref_out
+    s = eng.metrics.summary()
+    assert s["device_calls"] == ref_s["device_calls"]
+    assert s["n_faults"] == 0 and s["replays"] == 0 and s["retries"] == 0
+
+
+def test_nan_logits_contained_to_one_slot_and_recovered(served, ref):
+    """A NaN-logits fault fails ONLY the targeted slot; its request
+    replays and every stream still matches the fault-free run bitwise."""
+    ref_s, ref_out = ref
+    plan = FaultPlan(events=(
+        FaultEvent(tick=2, kind="nan_logits", call="any", slot=0),))
+    eng, out = _run(served, plan)
+    assert out == ref_out
+    s = eng.metrics.summary()
+    assert s["faults"].get("nonfinite_logits", 0) >= 1
+    assert s["replays"] >= 1
+    assert s["goodput"] == 1.0
+    # containment: exactly one request was charged the fault + replay
+    hit = [r for r in eng.metrics.requests.values() if r.faults > 0]
+    assert len(hit) == 1 and hit[0].replays >= 1
+
+
+def test_transient_step_exception_absorbed_by_retry(served, ref):
+    """repeat=1 models a blip one retry clears: no quarantine, no extra
+    SUCCESSFUL device calls (injection raises pre-dispatch), outputs
+    bitwise unchanged."""
+    ref_s, ref_out = ref
+    plan = FaultPlan(events=(
+        FaultEvent(tick=1, kind="step_exception", call="any", repeat=1),))
+    eng, out = _run(served, plan)
+    assert out == ref_out
+    s = eng.metrics.summary()
+    assert s["retries"] >= 1
+    assert s["replays"] == 0                      # retry, not replay
+    assert s["device_calls"] == ref_s["device_calls"]
+
+
+def test_persistent_step_exception_quarantines_participants(served, ref):
+    """repeat past the retry budget: every slot in the failed call
+    quarantines, replays, and the streams still finish bitwise."""
+    ref_s, ref_out = ref
+    plan = FaultPlan(events=(
+        FaultEvent(tick=1, kind="step_exception", call="any", repeat=99),))
+    eng, out = _run(served, plan, max_step_retries=2)
+    assert out == ref_out
+    s = eng.metrics.summary()
+    assert s["faults"]["step_exception"] >= 3     # 3 failed attempts min
+    assert s["replays"] >= 1
+    assert s["goodput"] == 1.0
+
+
+def test_cache_corruption_detected_by_propagation(served, ref):
+    """Poisoned cache slices have no direct detector — the NaN surfaces
+    as non-finite logits at the slot's next device call, which
+    quarantines it; replay restores the stream bitwise. Tick 1 slot 0
+    is mid-decode with two tokens out, so the replay record is prompt +
+    emitted stream, not just the prompt."""
+    ref_s, ref_out = ref
+    plan = FaultPlan(events=(
+        FaultEvent(tick=1, kind="cache_corruption", slot=0),))
+    eng, out = _run(served, plan)
+    assert out == ref_out
+    s = eng.metrics.summary()
+    assert s["faults"].get("cache_corruption", 0) == 1
+    assert s["faults"].get("nonfinite_logits", 0) >= 1   # the detection
+    assert s["replays"] >= 1 and s["goodput"] == 1.0
+
+
+def test_fault_budget_sheds_instead_of_livelocking(served, ref):
+    """max_replays=0: the first quarantine exhausts the budget and the
+    request is shed ("fault_budget"); the other streams finish bitwise."""
+    ref_s, ref_out = ref
+    plan = FaultPlan(events=(
+        FaultEvent(tick=2, kind="nan_logits", call="any", slot=0),))
+    eng, out = _run(served, plan, max_replays=0)
+    s = eng.metrics.summary()
+    assert s["n_shed"] == 1 and s["replays"] == 0
+    shed = [r for r in eng.metrics.requests.values() if r.outcome == "shed"]
+    assert len(shed) == 1 and shed[0].reason == "fault_budget"
+    assert s["n_completed"] == SPEC.n_requests - 1
+    for r in eng.metrics.requests.values():
+        if r.outcome == "done":
+            assert out[r.rid] == ref_out[r.rid]
+
+
+# --------------------------------------------- admission + SLO shedding --
+
+def test_oversized_and_queue_full_are_recorded_not_raised(served):
+    cfg, params, _ = served
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=8, queue_cap=1)
+    big = Request(rid=0, prompt=tuple(range(1, 8)), gen_len=8)
+    ok = Request(rid=1, prompt=(1, 2), gen_len=2)
+    extra = Request(rid=2, prompt=(3, 4), gen_len=2)
+    assert eng.submit(big) is False
+    assert eng.rejected[0] == "oversized"
+    assert eng.submit(ok) is True
+    assert eng.submit(extra) is False             # bounded queue
+    assert eng.rejected[2] == "queue_full"
+    s = eng.metrics.summary()
+    assert s["n_rejected"] == 2
+    assert eng.metrics.requests[0].outcome == "rejected"
+    assert eng.metrics.requests[2].reason == "queue_full"
+
+
+def test_hopeless_queued_request_shed_before_taking_a_slot(served):
+    cfg, params, _ = served
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=24, prefill_chunk=4)
+    doomed = Request(rid=0, prompt=tuple(range(1, 7)), gen_len=4,
+                     deadline=1.0)                # needs >= 5 ticks
+    fine = Request(rid=1, prompt=(1, 2, 3), gen_len=3, deadline=50.0)
+    out = eng.run([doomed, fine])
+    assert 0 not in out                           # never held a slot
+    r0 = eng.metrics.requests[0]
+    assert r0.outcome == "shed" and r0.reason == "deadline"
+    assert r0.admitted_tick is None
+    assert eng.metrics.requests[1].outcome == "done"
+
+
+def test_in_flight_request_preempted_when_fault_breaks_deadline(served):
+    """A request whose deadline was reachable at admission is preempted
+    the tick a fault's replay cost makes it unreachable."""
+    cfg, params, _ = served
+    plan = FaultPlan(events=(
+        FaultEvent(tick=1, kind="nan_logits", call="decode", slot=0),))
+    eng = ServeEngine(cfg, params, n_slots=1, max_len=24, prefill_chunk=4,
+                      fault_plan=plan)
+    # fault-free: chunk at tick 0 emits token 1, then one per tick ->
+    # done at tick 3 == the deadline, with zero slack for a replay
+    req = Request(rid=0, prompt=(1, 2, 3, 4), gen_len=4, deadline=3.0)
+    out = eng.run([req])
+    r = eng.metrics.requests[0]
+    assert r.outcome == "shed" and r.reason == "deadline"
+    assert r.faults >= 1                          # the fault that broke it
+    assert len(out[0]) < req.gen_len              # preempted mid-stream
+    assert eng.metrics.summary()["n_shed"] == 1
+
+
+def test_engine_stuck_error_carries_post_mortem(served):
+    cfg, params, trace = served
+    eng = ServeEngine(cfg, params, n_slots=2, max_len=24, prefill_chunk=4,
+                      max_ticks=2)
+    with pytest.raises(EngineStuckError) as ei:
+        eng.run(trace)
+    e = ei.value
+    assert isinstance(e.outputs, dict)
+    assert e.slot_log and e.slot_log[0].admit_tick == 0
+    assert e.summary["engine_ticks"] >= 2
