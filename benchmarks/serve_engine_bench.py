@@ -29,15 +29,27 @@ Guards (raise -> CI fails):
      asserted);
   5. SPF mean TTFT <= FIFO mean TTFT on the bimodal workload, with the
      no-starvation skip bound (skips <= spf_age_cap) intact;
-  6. a ZERO-fault FaultPlan leaves outputs and device-call count exactly
-     unchanged (the fault layer is free when idle);
+  6. a ZERO-fault FaultPlan *with the tracer attached* leaves outputs
+     and device-call count exactly unchanged vs the bare fault-free run
+     (the fault layer AND the obs layer are free when idle — the
+     zero-overhead-when-off contract);
   7. under a seeded fault schedule containing every fault kind, every
      completed request's tokens are BITWISE identical to the fault-free
      run (recovery-by-replay), with >= 1 of each kind detected;
-  8. goodput under that schedule >= 0.9.
+  8. goodput under that schedule >= 0.9;
+  9. per-call-kind weight-traffic WATERFALL rows (repro.obs.waterfall,
+     attribution by parameter path) sum EXACTLY to the call kind's
+     weight_bytes — no byte is unattributed;
+ 10. the recompile sentinel reports exactly ONE compile per
+     (call_kind, arch) after every engine run — the fixed-shape
+     no-recompile contract, measured not assumed.
+
+The chaos run is traced end to end; its span/event/interval stream plus
+the waterfall is dumped to ``TRACE_serve_chaos.jsonl`` (a CI artifact)
+and rendered through ``repro.launch.report`` as a smoke test.
 
     PYTHONPATH=src python -m benchmarks.serve_engine_bench [--smoke] \
-        [--out BENCH_serve_engine.json]
+        [--out BENCH_serve_engine.json] [--trace-out TRACE.jsonl]
 """
 
 from __future__ import annotations
@@ -51,10 +63,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_test_mesh
-from repro.launch.steps import build_step
 from repro.models import init_cache, init_params
 from repro.models.ssm import PARALLEL_PREFILL_ATOL
-from repro.runtime.jaxpr_cost import analyze_call_kinds
+from repro.obs import Tracer, serving_cost_by_kind, validate
 from repro.serving import FaultPlan, ServeEngine, WorkloadSpec, make_trace
 from repro.serving.faults import FAULT_KINDS
 from repro.sparsity.sparse_linear import (build_stacked_tables,
@@ -107,30 +118,26 @@ def _mk_cache(cfg):
     return cache
 
 
-def _weight_bytes_by_kind(cfg, mesh, params, tables) -> dict:
-    """Modeled weight bytes one device call of each engine call kind
-    moves through HBM, keyed by the step builders' call_kind tags."""
-    cache = _mk_cache(cfg)
-    decode_fn, _ = build_step(cfg, mesh, "decode", stacked_tables=tables)
-    tok1 = jnp.zeros((N_SLOTS, 1), jnp.int32)
-    act = jnp.ones((N_SLOTS,), bool)
-    tokc = jnp.zeros((N_SLOTS, PREFILL_CHUNK), jnp.int32)
-    nv = jnp.full((N_SLOTS,), PREFILL_CHUNK, jnp.int32)
-
-    calls = {decode_fn.call_kind: (decode_fn, (params, cache, tok1, act))}
-    caps = cfg.serving_capabilities()
-    if caps.chunked_prefill:
-        chunk_fn, _ = build_step(cfg, mesh, "prefill_chunk",
-                                 stacked_tables=tables)
-        calls[chunk_fn.call_kind] = (chunk_fn, (params, cache, tokc, nv))
-        if caps.parallel_prefill and not cfg.prefill_exact:
-            # the fallback the parallel form is measured against
-            exact_fn, _ = build_step(cfg.scaled(prefill_exact=True), mesh,
-                                     "prefill_chunk", stacked_tables=tables)
-            calls[exact_fn.call_kind] = (exact_fn,
-                                         (params, cache, tokc, nv))
-    kinds = analyze_call_kinds(calls)
-    return {kind: float(acc["weight_bytes"]) for kind, acc in kinds.items()}
+def _weight_bytes_by_kind(cfg, mesh, params, tables) -> tuple:
+    """(per-call weight bytes, per-parameter-path waterfall) for each
+    engine call kind, keyed by the step builders' call_kind tags
+    (repro.obs.waterfall.serving_cost_by_kind). Guard 9: each kind's
+    waterfall rows must sum EXACTLY to its weight_bytes."""
+    costs = serving_cost_by_kind(
+        cfg, mesh, params, _mk_cache(cfg), n_slots=N_SLOTS,
+        prefill_chunk=PREFILL_CHUNK, tables=tables,
+        include_exact_fallback=True)
+    wb = {kind: float(acc["weight_bytes"]) for kind, acc in costs.items()}
+    waterfall = {kind: dict(acc["weight_bytes_by_path"])
+                 for kind, acc in costs.items()}
+    for kind, rows in waterfall.items():
+        total = sum(rows.values())
+        if total != wb[kind]:              # integer bytes: exact equality
+            raise RuntimeError(
+                f"{cfg.name}/{kind}: waterfall rows sum to {total}, "
+                f"weight_bytes is {wb[kind]} — "
+                f"{wb[kind] - total:+.0f} bytes unattributed")
+    return wb, waterfall
 
 
 def _per_prompt_token(wb_by_kind: dict) -> dict:
@@ -152,6 +159,19 @@ def _run_engine(cfg, params, mesh, tables, trace, prefill_mode):
     return engine, outputs
 
 
+def _check_sentinel(engine, label: str) -> dict:
+    """Guard 10: after a full engine run, every registered jitted step
+    compiled exactly once. check() already ran per tick; this pins the
+    terminal counts into the BENCH record (0 = never called is fine for
+    steps the policy skips, e.g. chunk prefill in "full" mode)."""
+    counts = engine.sentinel.counts()
+    over = {k: c for k, c in counts.items() if c > 1}
+    if over:
+        raise RuntimeError(f"{label}: steps recompiled: {over} — the "
+                           f"fixed-shape no-recompile contract broke")
+    return counts
+
+
 def bench_arch(arch: str) -> dict:
     cfg = get_config(arch, reduced=True, dbpim_mode="joint")
     mesh = make_test_mesh()
@@ -161,7 +181,7 @@ def bench_arch(arch: str) -> dict:
         raise RuntimeError(f"{arch}: no stacked joint path — the serving "
                            "integration this bench measures is missing")
     params = strip_packed_projections(params, cfg)
-    wb = _weight_bytes_by_kind(cfg, mesh, params, tables)
+    wb, waterfall = _weight_bytes_by_kind(cfg, mesh, params, tables)
     wb_per_tok = _per_prompt_token(wb)
 
     trace = make_trace(SPEC, cfg.vocab_size)
@@ -173,10 +193,12 @@ def bench_arch(arch: str) -> dict:
                     "chunked_exact": cfg.scaled(prefill_exact=True),
                     "full": cfg}
     runs = {}
+    recompile_counts = {}
     for mode, mode_cfg in policies.items():
         prefill_mode = "full" if mode == "full" else "chunked"
         engine, outputs = _run_engine(mode_cfg, params, mesh, tables,
                                       trace, prefill_mode)
+        recompile_counts[mode] = _check_sentinel(engine, f"{arch}/{mode}")
         s = engine.metrics.summary()
         kind = engine.prefill_kind or "decode"
         total_wb = (s["decode_calls"] * wb["decode"]
@@ -224,6 +246,8 @@ def bench_arch(arch: str) -> dict:
                      "prompt_len": SPEC.prompt_len, "gen_len": SPEC.gen_len,
                      "dist": SPEC.dist, "seed": SPEC.seed},
         "per_call_weight_bytes": wb,
+        "weight_waterfall": waterfall,
+        "recompile_counts": recompile_counts,
         "prefill_weight_bytes_per_prompt_token": wb_per_tok,
         "tokens_per_step_chunked": tps_c,
         "tokens_per_step_full": tps_f,
@@ -310,13 +334,17 @@ def bench_schedule(arch: str = "tinyllama-1.1b") -> dict:
     return out
 
 
-def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
-    """Fault-tolerance guard (BENCH key ``chaos``): the same Poisson
-    trace runs fault-free, under a ZERO-fault plan, and under a seeded
-    fault schedule with every fault kind. Guards:
+def bench_chaos(arch: str = "tinyllama-1.1b",
+                trace_out: str = "TRACE_serve_chaos.jsonl") -> dict:
+    """Fault-tolerance + observability guard (BENCH key ``chaos``): the
+    same Poisson trace runs fault-free (bare), under a ZERO-fault plan
+    with the TRACER ATTACHED, and under a seeded fault schedule with
+    every fault kind (also traced). Guards:
 
-      6. no-overhead-when-idle — the zero-fault plan's outputs AND
-         device-call count are exactly the fault-free run's;
+      6. zero-overhead-when-off — the traced zero-fault run's outputs
+         AND device-call count are exactly the bare fault-free run's
+         (neither the fault layer nor the obs layer may perturb the
+         engine);
       7. bitwise recovery-by-replay — every request completed under
          faults carries IDENTICAL generated tokens to the fault-free
          run (the PR 3 chunk==decode invariant, weaponized as the
@@ -324,6 +352,10 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
          landing (step exception, NaN logits, corrupted slot cache);
       8. goodput (completed / submitted) >= CHAOS_GOODPUT_MIN under the
          bench fault rate.
+
+    The chaos run's trace (spans, lifecycle events, slot intervals,
+    waterfall) is structurally validated, dumped to ``trace_out``, and
+    rendered through the report CLI as a smoke test.
     """
     cfg = get_config(arch, reduced=True, dbpim_mode="joint")
     mesh = make_test_mesh()
@@ -332,28 +364,30 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
     params = strip_packed_projections(params, cfg)
     trace = make_trace(CHAOS_SPEC, cfg.vocab_size)
 
-    def run_once(plan):
+    def run_once(plan, tracer=None):
         engine = ServeEngine(cfg, params, mesh=mesh, n_slots=N_SLOTS,
                              max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
-                             stacked_tables=tables, fault_plan=plan)
+                             stacked_tables=tables, fault_plan=plan,
+                             tracer=tracer)
         outputs = engine.run(trace)
         return engine, outputs
 
     ref_engine, ref_out = run_once(None)
     ref_s = ref_engine.metrics.summary()
 
-    # guard 6: a zero-fault plan must be free
-    zero_engine, zero_out = run_once(FaultPlan.none())
+    # guard 6: a zero-fault plan + an attached tracer must BOTH be free
+    zero_engine, zero_out = run_once(FaultPlan.none(),
+                                     tracer=Tracer(arch=cfg.name))
     zero_s = zero_engine.metrics.summary()
     if zero_out != ref_out:
-        raise RuntimeError(f"{arch}: a ZERO-fault FaultPlan changed the "
-                           "generated tokens — the fault layer is not "
-                           "free when idle")
+        raise RuntimeError(f"{arch}: a ZERO-fault FaultPlan + tracer "
+                           "changed the generated tokens — the fault/obs "
+                           "layer is not free when idle")
     if zero_s["device_calls"] != ref_s["device_calls"]:
         raise RuntimeError(
-            f"{arch}: a ZERO-fault FaultPlan changed the device-call "
-            f"count ({zero_s['device_calls']} vs "
-            f"{ref_s['device_calls']}) — the fault layer is not free")
+            f"{arch}: a ZERO-fault FaultPlan + tracer changed the "
+            f"device-call count ({zero_s['device_calls']} vs "
+            f"{ref_s['device_calls']}) — the fault/obs layer is not free")
 
     # the schedule outlives the fault-free run: recovery replays stretch
     # the faulted run past ref ticks, and faults must keep landing there
@@ -364,7 +398,11 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
     if missing:
         raise RuntimeError(f"chaos plan (seed={CHAOS_FAULT_SEED}) lost "
                            f"fault kinds {missing} — re-pick the seed")
-    chaos_engine, chaos_out = run_once(plan)
+    chaos_tracer = Tracer(arch=cfg.name, meta={
+        "case": "chaos", "n_slots": N_SLOTS,
+        "prefill_chunk": PREFILL_CHUNK,
+        "fault_seed": CHAOS_FAULT_SEED, "fault_rate": CHAOS_FAULT_RATE})
+    chaos_engine, chaos_out = run_once(plan, tracer=chaos_tracer)
     s = chaos_engine.metrics.summary()
 
     # guard 7: bitwise recovery + every fault kind actually landed
@@ -388,6 +426,19 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
             f"{arch}: chaos goodput {s['goodput']:.2f} < "
             f"{CHAOS_GOODPUT_MIN} at fault rate {CHAOS_FAULT_RATE}")
 
+    # the chaos trace is the CI artifact: attach the waterfall, validate
+    # structurally, dump, and render through the report CLI (smoke)
+    from repro.obs import engine_waterfall
+    for kind, wf in engine_waterfall(chaos_engine).items():
+        chaos_tracer.waterfall(kind, wf["rows"], wf["total"])
+    trace_stats = validate(chaos_tracer.records)
+    if trace_out:
+        chaos_tracer.dump(trace_out)
+        from repro.launch.report import main as report_main
+        print(f"[serve_engine_bench] chaos trace -> {trace_out} "
+              f"({trace_stats}); report:")
+        report_main([trace_out])
+
     return {
         "arch": cfg.name, "n_slots": N_SLOTS, "max_len": MAX_LEN,
         "prefill_chunk": PREFILL_CHUNK,
@@ -403,6 +454,14 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
         "goodput": s["goodput"],
         "goodput_min": CHAOS_GOODPUT_MIN,
         "bitwise_recovery": True,
+        "zero_overhead_traced": True,
+        "trace_out": trace_out or None,
+        "trace_stats": trace_stats,
+        "recompile_counts": _check_sentinel(chaos_engine,
+                                            f"{arch}/chaos"),
+        "retries_by_kind": s["retries_by_kind"],
+        "call_latency_ms": s["call_latency_ms"],
+        "slot_busy_frac": s["slot_busy_frac"],
         "faults_detected": detected,
         "retries": s["retries"], "replays": s["replays"],
         "n_shed": s["n_shed"], "straggler_ticks": s["straggler_ticks"],
@@ -415,7 +474,8 @@ def bench_chaos(arch: str = "tinyllama-1.1b") -> dict:
     }
 
 
-def run(smoke: bool = False, out: str = "BENCH_serve_engine.json"):
+def run(smoke: bool = False, out: str = "BENCH_serve_engine.json",
+        trace_out: str = "TRACE_serve_chaos.jsonl"):
     # smoke covers BOTH archs: mamba2's parallel-prefill traffic contract
     # (guard 4) is a CI guard, not a local-only measurement
     archs = ARCHS
@@ -440,12 +500,13 @@ def run(smoke: bool = False, out: str = "BENCH_serve_engine.json"):
         f"ttft_ticks fifo={sched['fifo']['ttft_ticks_mean']:.2f} "
         f"spf={sched['spf']['ttft_ticks_mean']:.2f} "
         f"max_skips={sched['spf']['max_skips']}/{SPF_AGE_CAP}"))
-    chaos = bench_chaos()
+    chaos = bench_chaos(trace_out=trace_out)
     rows.append((
         "serve_engine.chaos", 0.0,
         f"goodput={chaos['goodput']:.2f} (min {CHAOS_GOODPUT_MIN}) "
         f"faults={chaos['faults_detected']} replays={chaos['replays']} "
-        f"bitwise_recovery={chaos['bitwise_recovery']}"))
+        f"bitwise_recovery={chaos['bitwise_recovery']} "
+        f"traced_zero_overhead={chaos['zero_overhead_traced']}"))
     emit(rows)
     payload = {"smoke": smoke, "archs": records, "schedule": sched,
                "chaos": chaos,
@@ -469,6 +530,8 @@ if __name__ == "__main__":
                     help="CI engine-path guard (same archs, marks the "
                          "JSON as a smoke artifact)")
     ap.add_argument("--out", default="BENCH_serve_engine.json")
+    ap.add_argument("--trace-out", default="TRACE_serve_chaos.jsonl",
+                    help="chaos-case trace artifact (JSONL; '' disables)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke, out=args.out)
+    run(smoke=args.smoke, out=args.out, trace_out=args.trace_out)

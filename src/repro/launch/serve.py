@@ -37,6 +37,13 @@ ticks; requests that can no longer meet it are shed (recorded, never
 raised), and ``--queue-cap`` bounds the admission queue with explicit
 load-shedding. ``--strict-admission`` restores the hard ValueError on
 oversized requests instead of a recorded rejection.
+
+Observability: ``--trace-out trace.jsonl`` records the full two-clock
+span/event stream (repro.obs.Tracer) plus the per-call-kind weight
+waterfall and dumps it as JSONL — render with ``python -m
+repro.launch.report trace.jsonl`` or convert for Perfetto with
+``--chrome``. Tracing is passive: outputs and device-call count are
+bitwise identical to an untraced run.
 """
 
 from __future__ import annotations
@@ -95,6 +102,13 @@ def build_engine_and_trace(args, cfg):
               f"{args.fault_ticks} ticks (seed={args.fault_seed}, "
               f"rate={args.fault_rate})")
 
+    tracer = None
+    if getattr(args, "trace_out", None):
+        from repro.obs import Tracer
+        tracer = Tracer(arch=cfg.name, meta={
+            "n_slots": args.batch, "prefill_chunk": args.prefill_chunk,
+            "schedule": args.schedule, "seed": args.seed})
+
     engine = ServeEngine(cfg, params, n_slots=args.batch,
                          max_len=args.max_len,
                          prefill_chunk=args.prefill_chunk,
@@ -107,7 +121,8 @@ def build_engine_and_trace(args, cfg):
                          fault_plan=fault_plan,
                          max_step_retries=getattr(args, "max_step_retries",
                                                   2),
-                         max_replays=getattr(args, "max_replays", 3))
+                         max_replays=getattr(args, "max_replays", 3),
+                         tracer=tracer)
     spec = WorkloadSpec(n_requests=args.requests,
                         arrival_rate=args.arrival_rate,
                         prompt_len=tuple(args.prompt_len),
@@ -183,6 +198,10 @@ def main(argv=None):
     ap.add_argument("--value-sparsity", type=float, default=None,
                     help="tile-granular value sparsity for --dbpim-mode "
                          "joint/value (default: cfg.dbpim_value_sparsity)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump the structured two-clock trace (spans, "
+                         "events, slot intervals, weight waterfall) as "
+                         "JSONL; render with python -m repro.launch.report")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced,
@@ -216,6 +235,24 @@ def main(argv=None):
               f"retries {s['retries']}  replays {s['replays']}  "
               f"rejected {s['n_rejected']}  shed {s['n_shed']}  "
               f"straggler_ticks {s['straggler_ticks']}")
+    if s["slot_busy_frac"] is not None:
+        print(f"[serve] slot_busy_frac {s['slot_busy_frac']:.2f}  "
+              f"per-slot "
+              f"{[round(o, 2) for o in s['slot_occupancy']]}")
+    for kind, h in s["call_latency_ms"].items():
+        print(f"[serve] latency {kind}: p50={h['p50_ms']:.2f} "
+              f"p95={h['p95_ms']:.2f} p99={h['p99_ms']:.2f} ms "
+              f"({h['count']} calls)")
+    if engine.sentinel is not None:
+        print(f"[serve] recompile sentinel: {engine.sentinel.counts()}")
+    if engine.tracer is not None:
+        from repro.obs import engine_waterfall
+        for kind, wf in engine_waterfall(engine).items():
+            engine.tracer.waterfall(kind, wf["rows"], wf["total"])
+        engine.tracer.dump(args.trace_out)
+        print(f"[serve] trace: {len(engine.tracer.records)} records -> "
+              f"{args.trace_out} (render: python -m repro.launch.report "
+              f"{args.trace_out})")
     for rid in sorted(outputs):
         print(f"  req{rid}: {outputs[rid][:8]}...")
     return outputs

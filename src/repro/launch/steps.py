@@ -219,6 +219,10 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
                                     mesh)
             return pspec, cspec, bspec["tokens"], bspec["n_valid"]
 
+    # which model family compiled this step — paired with call_kind it
+    # forms the recompile sentinel's registry key and the tracer's
+    # call-span arch attribute
+    step_fn.arch = cfg.name
     return step_fn, shardings
 
 

@@ -40,6 +40,19 @@ serving path attacks. Three rules, in precedence order per operand:
     int32 idx) plus rank-2 floats with a leading broadcast dim of 1
     (per-filter scales) and float operands of rank != 2 (block payloads).
     For the packed kernels this is exactly payload + idx + scales.
+
+PER-PATH WATERFALL (`weight_bytes_by_path`): every byte charged into
+`weight_bytes` is ALSO attributed to the parameter path it came from —
+the provenance tags carry the pytree key path of the seeding leaf
+("blocks/attn/wq", "seg00/blocks/ssm/w_in", "blocks/moe/w1", ...), and
+`const_weights` extends the same tagging to arrays CLOSED OVER by the
+step function (the stacked kernel tables, matched by object identity
+against the jaxpr's constvars and labeled "tables/<family>/<part>").
+Bytes charged by the shape fallbacks, whose provenance is unknown, land
+in explicit "(untagged ...)" rows. The rows are charged at exactly the
+same sites with exactly the same integer byte values as the scalar, so
+`sum(weight_bytes_by_path.values()) == weight_bytes` holds EXACTLY —
+the equality the serving benchmark asserts per call kind.
 """
 
 from __future__ import annotations
@@ -100,11 +113,12 @@ def _is_var(v) -> bool:
 
 def _map_tags(outer_invars, inner_invars, tagged):
     """Positional outer->inner tag mapping for sub-jaxpr recursion (scan
-    consts+carry+xs, pjit/remat bodies). A count mismatch (e.g. while's
-    cond consts) drops the tags — undercounting is the safe failure."""
+    consts+carry+xs, pjit/remat bodies). Tags are {var: param path}. A
+    count mismatch (e.g. while's cond consts) drops the tags —
+    undercounting is the safe failure."""
     if len(outer_invars) != len(inner_invars):
-        return set()
-    return {iv for ov, iv in zip(outer_invars, inner_invars)
+        return {}
+    return {iv: tagged[ov] for ov, iv in zip(outer_invars, inner_invars)
             if _is_var(ov) and ov in tagged}
 
 
@@ -130,24 +144,45 @@ def _is_pallas_weight(aval) -> bool:
     return is_float and (len(shape) != 2 or shape[0] == 1)
 
 
+#: waterfall rows for bytes the shape fallbacks charge — provenance
+#: unknown, but the bytes must still appear in a row so the rows sum to
+#: weight_bytes exactly
+UNTAGGED_DOT = "(untagged dot rhs)"
+UNTAGGED_PALLAS = "(untagged pallas operand)"
+
+
 def _walk(jaxpr, mult: int, acc: Dict[str, float],
-          convert_src: Dict[Any, Any] = None, weight_vars=None):
+          convert_src: Dict[Any, Any] = None, weight_vars=None, wf=None):
     # convert_src: var -> pre-convert var, so a dot whose operand is a
     # freshly dequantized int8 weight charges int8 bytes (the dequant
     # fuses into the matmul on TPU; HBM sees the int8 tensor).
-    # weight_vars: vars with parameter provenance (see module docstring);
-    # grown in place as structural ops pass the tag along.
+    # weight_vars: {var: param path} with parameter provenance (see
+    # module docstring); grown in place as structural ops pass tags along.
+    # wf: the per-path waterfall accumulator ({path: bytes}); every
+    # weight_bytes charge below mirrors into it at the same value.
     convert_src = {} if convert_src is None else convert_src
-    weight_vars = set() if weight_vars is None else weight_vars
+    weight_vars = {} if weight_vars is None else weight_vars
+
+    def tag_of(v):
+        if not _is_var(v):
+            return None
+        p = weight_vars.get(v)
+        if p is None:
+            p = weight_vars.get(convert_src.get(v, v))
+        return p
 
     def tagged(v):
-        return _is_var(v) and (v in weight_vars
-                               or convert_src.get(v, v) in weight_vars)
+        return tag_of(v) is not None
+
+    def charge(b, path):
+        acc["weight_bytes"] += b
+        if wf is not None:
+            wf[path] = wf.get(path, 0.0) + b
 
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
         if prim in _STRUCTURAL and eqn.invars and tagged(eqn.invars[0]):
-            weight_vars.add(eqn.outvars[0])
+            weight_vars[eqn.outvars[0]] = tag_of(eqn.invars[0])
         if prim == "convert_element_type" and len(eqn.invars) == 1:
             convert_src[eqn.outvars[0]] = eqn.invars[0]
             continue          # dtype converts fuse; no HBM traffic charged
@@ -168,16 +203,17 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
             #      weights whose tag died (in-graph int8 dequant).
             charged = [False, False]
             for i, v in enumerate(eqn.invars):
-                if tagged(v):
+                path = tag_of(v)
+                if path is not None:
                     src = convert_src.get(v, v)
-                    acc["weight_bytes"] += _bytes(src.aval) * mult
+                    charge(_bytes(src.aval) * mult, path)
                     charged[i] = True
             _, (_, rb) = eqn.params["dimension_numbers"]
             rhs_v = eqn.invars[1]
             rhs = convert_src.get(rhs_v, rhs_v) if _is_var(rhs_v) else rhs_v
             if (not charged[1]
                     and len(getattr(rhs.aval, "shape", ())) == 2 and not rb):
-                acc["weight_bytes"] += _bytes(rhs.aval) * mult
+                charge(_bytes(rhs.aval) * mult, UNTAGGED_DOT)
             continue
         if prim == "pallas_call":
             # Custom kernel (e.g. joint_sparse_matmul): its inner jaxpr
@@ -210,9 +246,10 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                  + sum(_bytes(v.aval) for v in eqn.outvars)) * mult
             acc["bytes"] += b
             acc["pallas_bytes"] += b
-            acc["weight_bytes"] += sum(
-                _bytes(v.aval) for v in eqn.invars
-                if _is_pallas_weight(v.aval)) * mult
+            for v in eqn.invars:
+                if _is_pallas_weight(v.aval):
+                    charge(_bytes(v.aval) * mult,
+                           tag_of(v) or UNTAGGED_PALLAS)
             continue
         if prim == "scan":
             length = int(eqn.params.get("length", 1))
@@ -222,25 +259,30 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
             # its tag on the per-iteration slice.
             _walk(inner.jaxpr, mult * length, acc,
                   weight_vars=_map_tags(eqn.invars, inner.jaxpr.invars,
-                                        weight_vars))
+                                        weight_vars), wf=wf)
             continue
         if prim == "while":
             # unbounded a priori; models don't use raw while. Count once.
-            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc)
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, acc, wf=wf)
             continue
         if prim == "cond":
             branches = eqn.params.get("branches", ())
             best = None
+            best_wf = None
             for br in branches:
                 a = {k: 0.0 for k in acc}
+                a_wf = None if wf is None else {}
                 _walk(br.jaxpr, mult, a,
                       weight_vars=_map_tags(eqn.invars[1:], br.jaxpr.invars,
-                                            weight_vars))
+                                            weight_vars), wf=a_wf)
                 if best is None or a["flops"] > best["flops"]:
-                    best = a
+                    best, best_wf = a, a_wf
             if best:
                 for k in acc:
                     acc[k] += best[k]
+                if wf is not None and best_wf:
+                    for p, b in best_wf.items():
+                        wf[p] = wf.get(p, 0.0) + b
             continue
         handled = False
         for pname in _SUBJAXPR_PARAMS:
@@ -249,7 +291,7 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                 inner = getattr(sub, "jaxpr", sub)
                 _walk(inner, mult, acc,
                       weight_vars=_map_tags(eqn.invars, inner.invars,
-                                            weight_vars))
+                                            weight_vars), wf=wf)
                 handled = True
                 break
         if handled:
@@ -268,34 +310,80 @@ def _walk(jaxpr, mult: int, acc: Dict[str, float],
                                          for v in eqn.invars)) * mult
 
 
-def analyze(fn, *args, weight_argnums: Tuple[int, ...] = (0,)
-            ) -> Dict[str, float]:
+def _path_str(key_path) -> str:
+    """'blocks/attn/wq'-style label from a tree_util key path."""
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):             # DictKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):           # SequenceKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):          # GetAttrKey
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def analyze(fn, *args, weight_argnums: Tuple[int, ...] = (0,),
+            const_weights: Dict[str, Any] = None) -> Dict[str, float]:
     """Trip-aware cost of `fn(*args)` (args may be ShapeDtypeStructs).
 
     weight_argnums: which positional args hold stored parameters — their
     leaves seed the provenance tags behind the exact weight_bytes rule
     (module docstring). Every call site in this repo passes params first,
     so the default (0,) is right; pass () to fall back to the pure shape
-    heuristics (e.g. when arg 0 is an activation)."""
+    heuristics (e.g. when arg 0 is an activation).
+
+    const_weights: {label: array-or-pytree} of stored weights the step
+    CLOSES OVER instead of taking as arguments — the serving engines
+    close over their stacked kernel tables. Leaves are matched by object
+    identity against the traced jaxpr's constvars and seed provenance
+    tags exactly like argument leaves do, so packed-table traffic is
+    attributed to its table path in ``weight_bytes_by_path`` instead of
+    the untagged-pallas fallback row.
+
+    The result's ``weight_bytes_by_path`` maps parameter paths to the
+    weight bytes charged against them; its values sum to
+    ``weight_bytes`` exactly (all charges are integer byte counts,
+    mirrored per-row at the charge site)."""
     closed = jax.make_jaxpr(fn)(*args)
     acc = {"flops": 0.0, "dot_flops": 0.0, "bytes": 0.0,
            "pallas_flops": 0.0, "pallas_bytes": 0.0, "weight_bytes": 0.0}
-    tags = set()
+    tags = {}
     leaf_counts = [len(jax.tree_util.tree_leaves(a)) for a in args]
     if sum(leaf_counts) == len(closed.jaxpr.invars):
         offsets = np.concatenate([[0], np.cumsum(leaf_counts)])
         for i in weight_argnums:
             if 0 <= i < len(args):
-                tags.update(closed.jaxpr.invars[offsets[i]:offsets[i + 1]])
-    _walk(closed.jaxpr, 1, acc, weight_vars=tags)
+                paths, _ = jax.tree_util.tree_flatten_with_path(args[i])
+                invars = closed.jaxpr.invars[offsets[i]:offsets[i + 1]]
+                for (kp, _), v in zip(paths, invars):
+                    tags[v] = _path_str(kp)
+    if const_weights:
+        by_id = {}
+        for label, tree in const_weights.items():
+            for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                suffix = _path_str(kp)
+                by_id[id(leaf)] = (label + "/" + suffix if suffix
+                                   else label)
+        for cv, cval in zip(closed.jaxpr.constvars, closed.consts):
+            label = by_id.get(id(cval))
+            if label is not None:
+                tags[cv] = label
+    wf: Dict[str, float] = {}
+    _walk(closed.jaxpr, 1, acc, weight_vars=tags, wf=wf)
     # argument + result residency: params/opt-state are read and written
     # once per step regardless of op-level traffic.
     arg_bytes = sum(_bytes(v.aval) for v in closed.jaxpr.invars)
     acc["arg_bytes"] = float(arg_bytes)
+    acc["weight_bytes_by_path"] = wf
     return acc
 
 
-def analyze_call_kinds(calls: Dict[str, tuple]) -> Dict[str, Dict[str, float]]:
+def analyze_call_kinds(calls: Dict[str, tuple],
+                       const_weights: Dict[str, Any] = None
+                       ) -> Dict[str, Dict[str, float]]:
     """Per-engine-call-kind cost attribution.
 
     `calls` maps a call kind — the serving engine's executables, e.g.
@@ -306,5 +394,7 @@ def analyze_call_kinds(calls: Dict[str, tuple]) -> Dict[str, Dict[str, float]]:
     call that pays it instead of collapsing into one blended number: the
     chunked-prefill traffic savings the benchmarks guard are per-KIND
     contracts (a parallel SSM chunk reads its projections once, an exact
-    chunk C times, a decode step once per token)."""
-    return {kind: analyze(fn, *args) for kind, (fn, args) in calls.items()}
+    chunk C times, a decode step once per token). ``const_weights`` is
+    forwarded to every analyze call (see analyze)."""
+    return {kind: analyze(fn, *args, const_weights=const_weights)
+            for kind, (fn, args) in calls.items()}

@@ -88,6 +88,25 @@ training loop at checkpoint granularity):
 
 Per-tick wall time feeds a runtime.fault.StragglerMonitor; outlier
 ticks are counted in metrics ("straggler_ticks").
+
+Observability (repro.obs) — all of it PASSIVE; with ``tracer=None``
+(default) outputs and device-call count are bitwise identical to a
+traced run (the zero-overhead contract the chaos bench guards):
+
+  * ``tracer=Tracer()`` records two-clock spans ("tick" per engine
+    tick, "call" per device call with call_kind/arch/occupancy/replay
+    attrs), slot lifecycle events (admit / prefill / first_token /
+    quarantine / replay / shed / reject / release / fault / retry), and
+    the closed
+    SlotIntervals — JSONL via tracer.dump, Chrome trace via obs.chrome,
+    rendered by ``python -m repro.launch.report``.
+  * the RECOMPILE SENTINEL (on by default) registers every jitted step
+    under its (call_kind, arch) key and raises obs.RecompileError the
+    tick any of them compiles more than once — the fixed-shape
+    no-recompile contract above, enforced instead of assumed.
+  * every device call's wall latency feeds a log-bucketed per-kind
+    histogram (metrics.summary()["call_latency_ms"]: p50/p95/p99
+    without storing raw samples).
 """
 
 from __future__ import annotations
@@ -106,6 +125,7 @@ import numpy as np
 from repro.launch.mesh import make_test_mesh
 from repro.launch.steps import build_step
 from repro.models import init_cache, reset_slots
+from repro.obs import RecompileSentinel, Tracer
 from repro.runtime import sharding as shr
 from repro.runtime.fault import StragglerMonitor
 from repro.serving.faults import FaultPlan, corrupt_cache
@@ -179,7 +199,9 @@ class ServeEngine:
                  enc_out=None, max_ticks: int = 100_000,
                  strict: bool = False, queue_cap: Optional[int] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 max_step_retries: int = 2, max_replays: int = 3):
+                 max_step_retries: int = 2, max_replays: int = 3,
+                 tracer: Optional[Tracer] = None,
+                 recompile_sentinel: bool = True):
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
                              f"{PREFILL_MODES}")
@@ -206,8 +228,10 @@ class ServeEngine:
         self.fault_plan = fault_plan
         self.max_step_retries = max_step_retries
         self.max_replays = max_replays
+        self.tracer = tracer
 
         self.params = params
+        self.stacked_tables = stacked_tables
         with self.mesh:
             cache = init_cache(cfg, n_slots, max_len, enc_out=enc_out)
             # per-slot positions from the start (merge_slots vectorizes
@@ -222,12 +246,25 @@ class ServeEngine:
             tok0 = jnp.zeros((n_slots, 1), jnp.int32)
             act0 = jnp.zeros((n_slots,), bool)
             pspec, cspec, tspec, aspec = shard_fn(params, cache, tok0, act0)
+            # COMMIT the fresh cache to its serving sharding up front:
+            # otherwise the first jitted call returns committed outputs
+            # whose signature differs from the uncommitted init arrays,
+            # and reset/prefill each compile a second, steady-state
+            # variant at tick 1 (the recompile sentinel caught this)
+            self.cache = jax.device_put(self.cache,
+                                        shr.named(cspec, self.mesh))
+            # out_shardings pin the returned cache to the SAME spec the
+            # steps take it with: left to propagation, XLA hands attn
+            # k/v back replicated, and every consumer (reset, prefill)
+            # compiles a second steady-state variant at tick 1 — the
+            # recompile sentinel caught this
             self._decode = jax.jit(
                 decode_fn,
                 in_shardings=(shr.named(pspec, self.mesh),
                               shr.named(cspec, self.mesh),
                               shr.named(tspec, self.mesh),
                               shr.named(aspec, self.mesh)),
+                out_shardings=(None, shr.named(cspec, self.mesh)),
                 donate_argnums=(1,))
             self._prefill = None
             if prefill_mode == "chunked":
@@ -235,13 +272,29 @@ class ServeEngine:
                     cfg, self.mesh, params, cache, n_slots, prefill_chunk,
                     stacked_tables=stacked_tables)
             self._reset = jax.jit(
-                lambda c, m: reset_slots(c, m, cfg), donate_argnums=(0,))
+                lambda c, m: reset_slots(c, m, cfg),
+                out_shardings=shr.named(cspec, self.mesh),
+                donate_argnums=(0,))
 
         # which chunk math this engine's prefill executable compiles to
         # ("prefill_parallel" / "prefill_chunk_exact"; None in "full" mode
         # where prompt tokens ride the decode call)
         self.prefill_kind = (self._prefill.call_kind
                              if self._prefill is not None else None)
+
+        # the fixed-shape no-recompile contract, enforced: each jitted
+        # step gets ONE compile; check() runs every tick (obs.sentinel)
+        self.sentinel = None
+        if recompile_sentinel:
+            self.sentinel = RecompileSentinel()
+            self.sentinel.register(RecompileSentinel.key("decode", cfg.name),
+                                   self._decode)
+            if self._prefill is not None:
+                self.sentinel.register(
+                    RecompileSentinel.key(self.prefill_kind, cfg.name),
+                    self._prefill)
+            self.sentinel.register(RecompileSentinel.key("reset", cfg.name),
+                                   self._reset)
 
         self.queue: deque = deque()
         self.skips: Dict[int, int] = {}   # QUEUED rid -> times jumped (spf);
@@ -280,13 +333,18 @@ class ServeEngine:
         if request.deadline is not None:
             self._has_deadlines = True
         self.metrics.on_submit(request.rid, request.prompt_len,
-                               request.gen_len, request.arrival)
+                               request.gen_len, request.arrival,
+                               deadline=request.deadline)
         return True
 
     def _reject(self, request: Request, reason: str) -> bool:
         self.rejected[request.rid] = reason
         self.metrics.on_reject(request.rid, request.prompt_len,
-                               request.gen_len, request.arrival, reason)
+                               request.gen_len, request.arrival, reason,
+                               deadline=request.deadline)
+        if self.tracer is not None:
+            self.tracer.event("reject", self.tick_count, rid=request.rid,
+                              reason=reason)
         return False
 
     def run(self, requests: List[Request]):
@@ -300,6 +358,7 @@ class ServeEngine:
                                 for s in self.slots):
             self.tick()
             if self.tick_count > self.max_ticks:
+                self._record_slot_log()
                 self.metrics.stop()
                 raise EngineStuckError(
                     f"engine exceeded max_ticks={self.max_ticks}; "
@@ -307,14 +366,24 @@ class ServeEngine:
                     outputs=dict(self.outputs),
                     slot_log=list(self.slot_log),
                     summary=self.metrics.summary())
+        self._record_slot_log()
         self.metrics.stop()
         return self.outputs
+
+    def _record_slot_log(self):
+        """Hand the slot audit log to the recorder so summary() can
+        aggregate slot_busy_frac / per-slot occupancy from it."""
+        self.metrics.record_slot_log(
+            [(iv.slot, iv.admit_tick, iv.release_tick)
+             for iv in self.slot_log], self.n_slots)
 
     # ------------------------------------------------------------- one tick
 
     def tick(self):
         t0 = time.monotonic()
         tick = self.tick_count
+        span = (self.tracer.begin("tick", tick)
+                if self.tracer is not None else None)
         calls = 0
         if self.fault_plan is not None:
             self._inject_cache_faults(tick)
@@ -324,17 +393,19 @@ class ServeEngine:
         if self.prefill_mode == "chunked":
             calls += self._prefill_phase(tick)
         calls += self._decode_phase(tick)
-        self.metrics.on_tick(
-            tick,
-            queue_depth=len(self.queue),
-            n_prefilling=sum(s.state is SlotState.PREFILLING
-                             for s in self.slots),
-            n_decoding=sum(s.state is SlotState.DECODING
-                           for s in self.slots),
-            device_calls=calls)
+        qd = len(self.queue)
+        n_pre = sum(s.state is SlotState.PREFILLING for s in self.slots)
+        n_dec = sum(s.state is SlotState.DECODING for s in self.slots)
+        self.metrics.on_tick(tick, queue_depth=qd, n_prefilling=n_pre,
+                             n_decoding=n_dec, device_calls=calls)
+        if span is not None:
+            self.tracer.end(span, queue_depth=qd, n_prefilling=n_pre,
+                            n_decoding=n_dec, device_calls=calls)
         self.tick_count += 1
         if self.straggler.record(time.monotonic() - t0):
             self.metrics.on_straggler(tick)
+        if self.sentinel is not None:
+            self.sentinel.check()
 
     # -------------------------------------------------------------- phases
 
@@ -395,8 +466,11 @@ class ServeEngine:
                 durable=prompt, gen_len=req.gen_len, deadline=req.deadline)
             mask[s] = True
             self.outputs[req.rid] = []
-            self.metrics.on_admit(req.rid, tick,
-                                  skips=self.skips.pop(req.rid, 0))
+            skips = self.skips.pop(req.rid, 0)
+            self.metrics.on_admit(req.rid, tick, skips=skips)
+            if self.tracer is not None:
+                self.tracer.event("admit", tick, rid=req.rid, slot=s,
+                                  wait=tick - req.arrival, skips=skips)
             iv = SlotInterval(slot=s, rid=req.rid, admit_tick=tick)
             self.slot_log.append(iv)
             self._open_interval[s] = iv
@@ -411,17 +485,27 @@ class ServeEngine:
         cursors = {s: self.slots[s].cursor for s in prefilling}
         tokens, n_valid = assemble_chunk(prefilling, cursors, self.n_slots,
                                          self.prefill_chunk)
-        res = self._device_call("prefill", self._prefill, self.params,
-                                self.cache, jnp.asarray(tokens),
-                                jnp.asarray(n_valid))
+        replaying = any(self.slots[s].replay for s in prefilling)
+        span = (self.tracer.begin(
+                    "call", tick, phase="prefill", kind=self.prefill_kind,
+                    arch=self.cfg.name, participants=sorted(prefilling),
+                    occupancy=len(prefilling) / self.n_slots,
+                    replay=replaying)
+                if self.tracer is not None else None)
+        c0 = time.monotonic()
+        res = self._device_call("prefill", self.prefill_kind,
+                                self._prefill, self.params, self.cache,
+                                jnp.asarray(tokens), jnp.asarray(n_valid))
+        dur_s = time.monotonic() - c0
+        if span is not None:
+            self.tracer.end(span, ok=res is not None)
         if res is None:                   # persistent step failure:
             for s in prefilling:          # quarantine every participant
                 self._quarantine(s, tick, "step_exception")
             return 0
         logits, self.cache = res
-        self.metrics.on_device_call(
-            "prefill", kind=self.prefill_kind,
-            replay=any(self.slots[s].replay for s in prefilling))
+        self.metrics.on_device_call("prefill", kind=self.prefill_kind,
+                                    replay=replaying, dur_s=dur_s)
         lg = self._host_logits(logits, tick, "prefill")
         nxt = lg.argmax(axis=-1)
         for s in prefilling:
@@ -431,6 +515,11 @@ class ServeEngine:
             slot = self.slots[s]
             slot.cursor += int(n_valid[s])
             self.metrics.on_prefill_step(slot.rid)
+            if self.tracer is not None:
+                self.tracer.event("prefill", tick, rid=slot.rid, slot=s,
+                                  cursor=slot.cursor,
+                                  prompt_len=len(slot.prompt),
+                                  replay=slot.replay)
             if slot.cursor >= len(slot.prompt):
                 # the chunk containing the last prompt token yields the
                 # first generated token — TTFT lands here
@@ -451,16 +540,27 @@ class ServeEngine:
                 active[s] = True
         if not active.any():
             return 0
-        res = self._device_call("decode", self._decode, self.params,
-                                self.cache, jnp.asarray(tokens),
-                                jnp.asarray(active))
+        span = (self.tracer.begin(
+                    "call", tick, phase="decode", kind="decode",
+                    arch=self.cfg.name,
+                    participants=[s for s in range(self.n_slots)
+                                  if active[s]],
+                    occupancy=float(active.mean()))
+                if self.tracer is not None else None)
+        c0 = time.monotonic()
+        res = self._device_call("decode", "decode", self._decode,
+                                self.params, self.cache,
+                                jnp.asarray(tokens), jnp.asarray(active))
+        dur_s = time.monotonic() - c0
+        if span is not None:
+            self.tracer.end(span, ok=res is not None)
         if res is None:
             for s in range(self.n_slots):
                 if active[s]:
                     self._quarantine(s, tick, "step_exception")
             return 0
         logits, self.cache = res
-        self.metrics.on_device_call("decode", kind="decode")
+        self.metrics.on_device_call("decode", kind="decode", dur_s=dur_s)
         lg = self._host_logits(logits, tick, "decode")
         nxt = lg.argmax(axis=-1)
         for s, slot in enumerate(self.slots):
@@ -472,6 +572,11 @@ class ServeEngine:
             if slot.state is SlotState.PREFILLING:
                 slot.cursor += 1
                 self.metrics.on_prefill_step(slot.rid)
+                if self.tracer is not None:
+                    self.tracer.event("prefill", tick, rid=slot.rid,
+                                      slot=s, cursor=slot.cursor,
+                                      prompt_len=len(slot.prompt),
+                                      replay=slot.replay)
                 if slot.cursor >= len(slot.prompt):
                     self._finish_prefill(s, int(nxt[s]),
                                          np.asarray(logits[s]), tick)
@@ -486,14 +591,17 @@ class ServeEngine:
 
     # ----------------------------------------------- fault containment ----
 
-    def _device_call(self, call: str, fn, *args):
+    def _device_call(self, call: str, kind: str, fn, *args):
         """Run a device call under the fault contract: injected or real
         exceptions get ``max_step_retries`` re-issues (the injection
         layer raises BEFORE dispatch, so the donated cache buffer is
         intact for the retry); past the budget, returns None and the
         caller quarantines every participating slot. With no fault plan
         installed, real exceptions propagate unchanged — containment
-        must never hide a programming error in a plain run."""
+        must never hide a programming error in a plain run.
+
+        ``call`` is the fault-plan phase key ("prefill" / "decode");
+        ``kind`` the compiled call_kind retries are attributed to."""
         attempt = 0
         while True:
             try:
@@ -506,10 +614,17 @@ class ServeEngine:
                     raise
                 self.metrics.on_fault("step_exception", None,
                                       self.tick_count)
+                if self.tracer is not None:
+                    self.tracer.event("fault", self.tick_count,
+                                      kind="step_exception", call=kind,
+                                      attempt=attempt, error=str(e))
                 attempt += 1
                 if attempt > self.max_step_retries:
                     return None
-                self.metrics.on_retry(call)
+                self.metrics.on_retry(kind)
+                if self.tracer is not None:
+                    self.tracer.event("retry", self.tick_count, call=kind,
+                                      attempt=attempt)
 
     def _host_logits(self, logits, tick: int, call: str) -> np.ndarray:
         """Host-side (B, V) f32 logits for argmax + the finite-guard;
@@ -534,6 +649,9 @@ class ServeEngine:
         for s in slots:
             self.metrics.on_fault("cache_corruption", self.slots[s].rid,
                                   tick)
+            if self.tracer is not None:
+                self.tracer.event("fault", tick, kind="cache_corruption",
+                                  rid=self.slots[s].rid, slot=s)
 
     def _quarantine(self, s: int, tick: int, kind: str):
         """Contain a fault to slot ``s`` and schedule recovery-by-replay:
@@ -547,8 +665,14 @@ class ServeEngine:
         rid = slot.rid
         self.metrics.on_fault(kind, rid, tick)
         slot.fault_count += 1
+        if self.tracer is not None:
+            self.tracer.event("quarantine", tick, rid=rid, slot=s,
+                              kind=kind, fault_count=slot.fault_count)
         if slot.fault_count > self.max_replays:
             self.metrics.on_shed(rid, tick, "fault_budget")
+            if self.tracer is not None:
+                self.tracer.event("shed", tick, rid=rid, slot=s,
+                                  reason="fault_budget")
             self._close_interval(s, tick)
             self.slots[s] = _Slot()
             return
@@ -562,6 +686,9 @@ class ServeEngine:
         slot.pending_token = 0
         slot.replay = bool(emitted)
         slot.state = SlotState.PREFILLING
+        if self.tracer is not None:
+            self.tracer.event("replay", tick, rid=rid, slot=s,
+                              record_len=int(len(record)))
         mask = np.zeros((self.n_slots,), bool)
         mask[s] = True
         self.cache = self._reset(self.cache, jnp.asarray(mask))
@@ -592,6 +719,9 @@ class ServeEngine:
             if r.deadline is not None and tick + est - 1 > r.deadline:
                 self.skips.pop(r.rid, None)
                 self.metrics.on_shed(r.rid, tick, "deadline")
+                if self.tracer is not None:
+                    self.tracer.event("shed", tick, rid=r.rid,
+                                      reason="deadline", where="queue")
             else:
                 kept.append(r)
         self.queue.extendleft(reversed(kept))
@@ -609,6 +739,9 @@ class ServeEngine:
             if tick + self._min_ticks_to_done(prompt_left, gen_left) - 1 \
                     > slot.deadline:
                 self.metrics.on_shed(slot.rid, tick, "deadline")
+                if self.tracer is not None:
+                    self.tracer.event("shed", tick, rid=slot.rid, slot=s,
+                                      reason="deadline", where="slot")
                 self._close_interval(s, tick)
                 self.slots[s] = _Slot()   # cache zeroed at next admit
 
@@ -626,6 +759,9 @@ class ServeEngine:
             # first_logits were recorded before the fault
             self.first_logits[slot.rid] = logits
             self.metrics.on_first_token(slot.rid, tick)
+            if self.tracer is not None:
+                self.tracer.event("first_token", tick, rid=slot.rid,
+                                  slot=s)
         slot.replay = False
         self.metrics.on_token(slot.rid)
         if len(self.outputs[slot.rid]) >= slot.gen_len:
@@ -635,9 +771,15 @@ class ServeEngine:
         iv = self._open_interval.pop(s, None)
         if iv is not None:
             iv.release_tick = tick + 1
+            if self.tracer is not None:
+                self.tracer.interval(iv.slot, iv.rid, iv.admit_tick,
+                                     iv.release_tick)
 
     def _release(self, s: int, tick: int):
         slot = self.slots[s]
         self.metrics.on_done(slot.rid, tick)
+        if self.tracer is not None:
+            self.tracer.event("release", tick, rid=slot.rid, slot=s,
+                              tokens=len(self.outputs[slot.rid]))
         self._close_interval(s, tick)
         self.slots[s] = _Slot()           # FREE; cache zeroed at next admit

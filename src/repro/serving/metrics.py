@@ -14,7 +14,9 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.histogram import LogHistogram
 
 
 @dataclass
@@ -23,6 +25,7 @@ class RequestMetrics:
     prompt_len: int
     gen_len: int
     arrival: float
+    deadline: Optional[float] = None  # SLO tick; None = no deadline
     admitted_tick: Optional[int] = None
     first_token_tick: Optional[int] = None
     done_tick: Optional[int] = None
@@ -42,6 +45,14 @@ class RequestMetrics:
         if self.first_token_tick is None:
             return None
         return self.first_token_tick - int(self.arrival)
+
+    @property
+    def admission_wait_ticks(self) -> Optional[int]:
+        """Arrival -> admission, in engine ticks — the queueing share of
+        TTFT, which is what SLO shedding decisions act on."""
+        if self.admitted_tick is None:
+            return None
+        return self.admitted_tick - int(self.arrival)
 
 
 @dataclass
@@ -65,6 +76,10 @@ class MetricsRecorder:
         # fault-tolerance counters (serving.faults / engine containment)
         self.faults: Dict[str, int] = {}        # fault kind -> count
         self.retries = 0                        # re-issued device calls
+        #: retries by the failed call's call_kind tag — which executable
+        #: kept going down, same attribution calls_by_kind gives replay
+        #: traffic
+        self.retries_by_kind: Dict[str, int] = {}
         self.replays = 0                        # recovery-by-replay resets
         self.rejected = 0                       # refused at submit
         self.shed = 0                           # dropped after acceptance
@@ -73,6 +88,14 @@ class MetricsRecorder:
         #: tagged "<kind>+replay" so recovery traffic is attributable
         #: (launch.steps.build_step call_kind contract)
         self.calls_by_kind: Dict[str, int] = {}
+        #: per-call wall latency, log-bucketed per call_kind tag —
+        #: p50/p95/p99 without storing raw samples (obs.histogram)
+        self.call_latency: Dict[str, LogHistogram] = {}
+        #: closed slot-occupancy intervals [(slot, admit, release), ...]
+        #: + slot count, installed by the engine (record_slot_log) so
+        #: summary() can aggregate the audit log into utilization
+        self._slot_log: List[Tuple[int, int, Optional[int]]] = []
+        self._n_slots: int = 0
         self._t0: Optional[float] = None
         self._wall: float = 0.0
 
@@ -90,9 +113,10 @@ class MetricsRecorder:
             self._t0 = None
 
     # -- events ------------------------------------------------------------
-    def on_submit(self, rid, prompt_len, gen_len, arrival):
+    def on_submit(self, rid, prompt_len, gen_len, arrival, deadline=None):
         self.requests[rid] = RequestMetrics(
-            rid=rid, prompt_len=prompt_len, gen_len=gen_len, arrival=arrival)
+            rid=rid, prompt_len=prompt_len, gen_len=gen_len,
+            arrival=arrival, deadline=deadline)
 
     def on_admit(self, rid, tick, skips: int = 0):
         self.requests[rid].admitted_tick = tick
@@ -117,10 +141,13 @@ class MetricsRecorder:
                                       n_decoding, device_calls))
 
     def on_device_call(self, call: str, kind: Optional[str] = None,
-                       replay: bool = False):
+                       replay: bool = False,
+                       dur_s: Optional[float] = None):
         """``call`` is the engine phase ("decode" | "prefill");
         ``kind`` the compiled step's call_kind tag, suffixed "+replay"
-        when the batch carries a recovering slot."""
+        when the batch carries a recovering slot. ``dur_s`` (wall
+        seconds around the device call) feeds the per-kind log-bucketed
+        latency histogram."""
         if call == "decode":
             self.decode_calls += 1
         elif call == "prefill":
@@ -130,14 +157,19 @@ class MetricsRecorder:
             from repro.launch.steps import REPLAY_TAG
             tag += REPLAY_TAG
         self.calls_by_kind[tag] = self.calls_by_kind.get(tag, 0) + 1
+        if dur_s is not None:
+            if tag not in self.call_latency:
+                self.call_latency[tag] = LogHistogram()
+            self.call_latency[tag].add(dur_s)
 
     # -- fault-tolerance events --------------------------------------------
-    def on_reject(self, rid, prompt_len, gen_len, arrival, reason: str):
+    def on_reject(self, rid, prompt_len, gen_len, arrival, reason: str,
+                  deadline=None):
         """A request refused at submit: recorded, never admitted. The
         row exists so ``n_requests`` still counts every submission and
         results can report the rejection."""
         r = RequestMetrics(rid=rid, prompt_len=prompt_len, gen_len=gen_len,
-                           arrival=arrival)
+                           arrival=arrival, deadline=deadline)
         r.outcome, r.reason = "rejected", reason
         self.requests[rid] = r
         self.rejected += 1
@@ -156,7 +188,11 @@ class MetricsRecorder:
             self.requests[rid].faults += 1
 
     def on_retry(self, call: str):
+        """``call`` is the failed step's call_kind tag; the per-kind
+        count makes "which executable kept failing" answerable (the old
+        recorder dropped the argument on the floor)."""
         self.retries += 1
+        self.retries_by_kind[call] = self.retries_by_kind.get(call, 0) + 1
 
     def on_replay(self, rid):
         self.replays += 1
@@ -164,6 +200,17 @@ class MetricsRecorder:
 
     def on_straggler(self, tick):
         self.straggler_ticks += 1
+
+    def record_slot_log(self, intervals: List[Tuple[int, int, Optional[int]]],
+                        n_slots: int):
+        """Install the engine's slot audit log — [(slot, admit_tick,
+        release_tick-or-None), ...] — so summary() can aggregate it into
+        ``slot_busy_frac`` / per-slot occupancy. The engine calls this
+        at shutdown (the log was collected all along but never
+        aggregated before); open intervals count as busy through the
+        last tick."""
+        self._slot_log = list(intervals)
+        self._n_slots = n_slots
 
     # -- summaries ---------------------------------------------------------
     def summary(self) -> dict:
@@ -198,6 +245,18 @@ class MetricsRecorder:
         qd = [t.queue_depth for t in self.ticks]
         n_completed = sum(r.done_tick is not None
                           for r in self.requests.values())
+        # slot utilization from the audit log (record_slot_log): busy
+        # ticks per slot / engine ticks; open intervals run to the end
+        n_ticks = len(self.ticks)
+        slot_busy_frac = None
+        slot_occupancy = None
+        if self._n_slots and n_ticks:
+            busy = [0] * self._n_slots
+            for slot, admit, release in self._slot_log:
+                end = n_ticks if release is None else min(release, n_ticks)
+                busy[slot] += max(end - admit, 0)
+            slot_occupancy = [b / n_ticks for b in busy]
+            slot_busy_frac = sum(busy) / (self._n_slots * n_ticks)
         return {
             "n_requests": len(self.requests),
             "n_completed": n_completed,
@@ -209,9 +268,15 @@ class MetricsRecorder:
             "faults": dict(self.faults),
             "n_faults": sum(self.faults.values()),
             "retries": self.retries,
+            "retries_by_kind": dict(self.retries_by_kind),
             "replays": self.replays,
             "straggler_ticks": self.straggler_ticks,
             "calls_by_kind": dict(self.calls_by_kind),
+            "call_latency_ms": {tag: h.summary_ms()
+                                for tag, h in self.call_latency.items()},
+            # from the slot audit log; None until record_slot_log runs
+            "slot_busy_frac": slot_busy_frac,
+            "slot_occupancy": slot_occupancy,
             "goodput": n_completed / max(len(self.requests), 1),
             "ttft_n": len(ttfts),
             "n_no_first_token": len(self.requests) - len(ttfts),
@@ -242,7 +307,9 @@ class MetricsRecorder:
             out.append({
                 "rid": r.rid, "prompt_len": r.prompt_len,
                 "gen_len": r.gen_len, "arrival": r.arrival,
+                "deadline": r.deadline,
                 "admitted_tick": r.admitted_tick,
+                "admission_wait_ticks": r.admission_wait_ticks,
                 "first_token_tick": r.first_token_tick,
                 "done_tick": r.done_tick,
                 "ttft_ticks": r.ttft_ticks,

@@ -81,7 +81,12 @@ def build_chunk_step(cfg, mesh, params, cache, n_slots: int, chunk: int,
                                    shr.named(cspec, mesh),
                                    shr.named(tspec, mesh),
                                    shr.named(nspec, mesh)),
+                     # pin the returned cache to the spec it arrives
+                     # with; propagated (replicated) output shardings
+                     # make downstream steps recompile at tick 1
+                     out_shardings=(None, shr.named(cspec, mesh)),
                      donate_argnums=(1,))
     # per-kind cost attribution rides along (jaxpr_cost.analyze_call_kinds)
     jitted.call_kind = step_fn.call_kind
+    jitted.arch = cfg.name
     return jitted

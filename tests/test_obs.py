@@ -1,0 +1,277 @@
+"""Observability subsystem (repro.obs): the zero-overhead-when-off
+contract, trace structural invariants under a seeded fault plan, the
+recompile sentinel, exact waterfall attribution, log-bucketed latency
+histograms, the Chrome-trace converter, and the report CLI."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh
+from repro.models import init_cache, init_params
+from repro.obs import (LogHistogram, RecompileError, RecompileSentinel,
+                       Tracer, engine_waterfall, serving_cost_by_kind,
+                       to_chrome_trace, validate)
+from repro.obs.trace import TraceError, load
+from repro.serving import FaultPlan, Request, ServeEngine
+from repro.sparsity.sparse_linear import (build_stacked_tables,
+                                          strip_packed_projections)
+
+N_SLOTS = 2
+MAX_LEN = 48
+CHUNK = 4
+
+
+def _cfg(arch="tinyllama-1.1b", **kw):
+    return get_config(arch, reduced=True, **kw).scaled(
+        n_layers=2, d_model=32, vocab_size=64, **{})
+
+
+def _requests(n=5, gen=5):
+    return [Request(rid=i, prompt=list(range(1, 5 + i)), gen_len=gen,
+                    arrival=i) for i in range(n)]
+
+
+def _run(cfg, params, *, tracer=None, fault_plan=None, n=5):
+    engine = ServeEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                         prefill_chunk=CHUNK, tracer=tracer,
+                         fault_plan=fault_plan)
+    outputs = engine.run(_requests(n))
+    return engine, outputs
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def chaos_traced(tiny):
+    """One seeded-fault traced run shared by the structural tests."""
+    cfg, params = tiny
+    plan = FaultPlan.generate(seed=3, n_ticks=60, rate=0.3,
+                              n_slots=N_SLOTS)
+    tracer = Tracer(arch=cfg.name, meta={"case": "test"})
+    engine, outputs = _run(cfg, params, tracer=tracer, fault_plan=plan)
+    return engine, tracer
+
+
+# ------------------------------------------------ zero-overhead-when-off --
+
+def test_tracer_off_is_bitwise_free(tiny):
+    """The tentpole contract: tracer attached vs not — SAME generated
+    tokens (bitwise) and SAME device-call count. Instrumentation must
+    observe the engine, never steer it."""
+    cfg, params = tiny
+    traced_engine, traced_out = _run(cfg, params, tracer=Tracer(cfg.name))
+    bare_engine, bare_out = _run(cfg, params)
+    assert traced_out == bare_out
+    ts, bs = traced_engine.metrics.summary(), bare_engine.metrics.summary()
+    assert ts["device_calls"] == bs["device_calls"]
+    assert ts["calls_by_kind"] == bs["calls_by_kind"]
+    assert ts["engine_ticks"] == bs["engine_ticks"]
+
+
+# ---------------------------------------------------- trace invariants ----
+
+def test_trace_validates_under_faults(chaos_traced):
+    """A chaotic traced run still satisfies every structural invariant:
+    meta-first, monotone clocks, closed LIFO spans, call-within-tick
+    containment, exclusive per-slot intervals."""
+    engine, tracer = chaos_traced
+    stats = validate(tracer.records)
+    assert stats["spans"] > 0 and stats["intervals"] > 0
+    s = engine.metrics.summary()
+    names = [r["name"] for r in tracer.records if r.get("type") == "event"]
+    # the fault plan landed -> the lifecycle events must be in the trace
+    assert s["n_faults"] > 0 and "fault" in names
+    assert s["replays"] == names.count("replay")
+    assert names.count("admit") >= 5          # every request admitted
+    # one tick span per engine tick, device calls covered by call spans
+    ticks = [r for r in tracer.records
+             if r.get("type") == "span" and r["name"] == "tick"]
+    calls = [r for r in tracer.records
+             if r.get("type") == "span" and r["name"] == "call"]
+    assert len(ticks) == s["engine_ticks"]
+    assert len(calls) == s["device_calls"]
+
+
+def test_trace_roundtrip_and_report(chaos_traced, tmp_path, capsys):
+    """dump -> load roundtrips; the report CLI renders the trace and the
+    Chrome converter emits a loadable Perfetto JSON."""
+    engine, tracer = chaos_traced
+    for kind, wf in engine_waterfall(engine).items():
+        tracer.waterfall(kind, wf["rows"], wf["total"])
+    path = tmp_path / "trace.jsonl"
+    tracer.dump(str(path))
+    records = load(str(path))
+    assert validate(records) == validate(tracer.records)
+
+    from repro.launch.report import main as report_main
+    chrome = tmp_path / "chrome.json"
+    assert report_main([str(path), "--chrome", str(chrome)]) == 0
+    out = capsys.readouterr().out
+    for section in ("TIMELINE", "SLOTS", "QUEUE DEPTH", "WATERFALL",
+                    "FAULTS"):
+        assert section in out, f"report missing {section} section"
+    ct = json.loads(chrome.read_text())
+    assert any(e.get("ph") == "X" for e in ct["traceEvents"])
+
+
+def test_span_nesting_is_lifo_enforced():
+    tr = Tracer()
+    t = tr.begin("tick", 0)
+    c = tr.begin("call", 0)
+    with pytest.raises(TraceError):
+        tr.end(t)                  # closing the outer span first
+    tr.end(c)
+    tr.end(t)
+    with pytest.raises(TraceError):
+        tr.end(t)                  # double close
+
+
+def test_dump_refuses_open_spans(tmp_path):
+    tr = Tracer()
+    tr.begin("tick", 0)
+    with pytest.raises(TraceError):
+        tr.dump(str(tmp_path / "x.jsonl"))
+
+
+def test_validate_rejects_malformed():
+    tr = Tracer()
+    s = tr.begin("tick", 0)
+    tr.end(s)
+    bad = [dict(r) for r in tr.records]
+    bad[1]["name"] = "mystery"
+    with pytest.raises(TraceError):
+        validate(bad)
+    with pytest.raises(TraceError):
+        validate(tr.records[1:])   # no meta record
+    # ticks must be monotone
+    tr2 = Tracer()
+    a = tr2.begin("tick", 5)
+    tr2.end(a)
+    b = tr2.begin("tick", 4)
+    tr2.end(b)
+    with pytest.raises(TraceError):
+        validate(tr2.records)
+
+
+# ------------------------------------------------------------- sentinel ---
+
+def test_sentinel_catches_shape_varying_jit():
+    """A jitted fn fed two shapes compiles twice; check() must raise.
+    The same fn fed one shape repeatedly stays at one compile."""
+    fixed = jax.jit(lambda x: x * 2)
+    varying = jax.jit(lambda x: x + 1)
+    sent = RecompileSentinel()
+    sent.register("fixed@test", fixed)
+    sent.register("varying@test", varying)
+    for _ in range(3):
+        fixed(jnp.zeros((4,)))
+    varying(jnp.zeros((4,)))
+    sent.check()                              # 1 compile each: fine
+    varying(jnp.zeros((8,)))                  # shape change -> recompile
+    with pytest.raises(RecompileError, match="varying@test"):
+        sent.check()
+    assert sent.counts()["varying@test"] == 2
+    assert sent.counts()["fixed@test"] == 1
+
+
+def test_engine_sentinel_one_compile_per_step(tiny):
+    """After a full serve, every registered (call_kind, arch) key sits
+    at exactly one compile — the fixed-shape no-recompile contract."""
+    cfg, params = tiny
+    engine, _ = _run(cfg, params)
+    counts = engine.sentinel.counts()
+    assert counts and all(c <= 1 for c in counts.values()), counts
+    assert any(k.startswith("decode@") for k in counts)
+
+
+# ------------------------------------------------------------ waterfall ---
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-1.3b"])
+def test_waterfall_rows_sum_exactly_to_weight_bytes(arch):
+    """Every modeled weight byte lands in exactly one parameter-path row:
+    sum(rows) == weight_bytes with NO tolerance, stacked tables
+    included (closure-const attribution)."""
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint").scaled(
+        n_layers=2, d_model=64, vocab_size=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    assert tables is not None
+    params = strip_packed_projections(params, cfg)
+    mesh = make_test_mesh()
+    cache = init_cache(cfg, N_SLOTS, MAX_LEN)
+    cache["pos"] = jnp.zeros((N_SLOTS,), jnp.int32)
+    if "attn" in cache and "pos" in cache["attn"]:
+        cache["attn"]["pos"] = jnp.zeros((N_SLOTS,), jnp.int32)
+    costs = serving_cost_by_kind(cfg, mesh, params, cache,
+                                 n_slots=N_SLOTS, prefill_chunk=CHUNK,
+                                 tables=tables,
+                                 include_exact_fallback=True)
+    assert "decode" in costs
+    for kind, acc in costs.items():
+        rows = acc["weight_bytes_by_path"]
+        assert rows, f"{kind}: empty waterfall"
+        assert sum(rows.values()) == acc["weight_bytes"], kind
+        # stacked serving: the packed tables must be attributed by name,
+        # not lumped into a fallback bucket
+        assert any(p.startswith("tables/") for p in rows), (kind, rows)
+
+
+# ------------------------------------------------------------ histogram ---
+
+def test_log_histogram_percentiles_and_merge():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-3.0, sigma=1.0, size=4000)
+    h = LogHistogram()
+    for v in vals:
+        h.add(float(v))
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.quantile(vals, q))
+        est = h.percentile(q)
+        # log-bucketed: estimate within one bucket (growth factor ~9%)
+        assert abs(est - exact) / exact < 0.10, (q, est, exact)
+    # merge(a, b) == histogram of concatenation
+    h1, h2 = LogHistogram(), LogHistogram()
+    for v in vals[:2000]:
+        h1.add(float(v))
+    for v in vals[2000:]:
+        h2.add(float(v))
+    h1.merge(h2)
+    d1, d = h1.to_dict(), h.to_dict()
+    assert d1["buckets"] == d["buckets"] and d1["count"] == d["count"]
+    # raw-value running sums differ only by float addition order
+    assert d1["total"] == pytest.approx(d["total"])
+    # dict roundtrip
+    h3 = LogHistogram.from_dict(h.to_dict())
+    assert h3.percentile(0.5) == h.percentile(0.5)
+    s = h.summary_ms()
+    assert s["count"] == 4000 and s["p50_ms"] > 0
+
+
+# ---------------------------------------------------------------- chrome --
+
+def test_chrome_trace_structure():
+    tr = Tracer(arch="x")
+    t = tr.begin("tick", 0)
+    c = tr.begin("call", 0, kind="decode")
+    tr.end(c)
+    tr.end(t)
+    tr.event("admit", 0, rid=7, slot=1)
+    tr.interval(slot=1, rid=7, admit_tick=0, release_tick=3)
+    ct = to_chrome_trace(tr.records)
+    phases = {e["ph"] for e in ct["traceEvents"]}
+    assert {"X", "i", "M"} <= phases
+    # the interval lands on the slot's own track (tid = slot + 1)
+    ivs = [e for e in ct["traceEvents"]
+           if e["ph"] == "X" and e.get("tid") == 2]
+    assert len(ivs) == 1 and "rid7" in ivs[0]["name"]
+    json.dumps(ct)                            # must be serializable

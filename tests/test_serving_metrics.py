@@ -1,7 +1,9 @@
 """MetricsRecorder.summary() contract: requests that never reach a first
 token are counted explicitly (never silently folded into or dropped from
-the TTFT aggregates), the all-queued-at-shutdown edge cannot crash, and
-percentiles are nearest-rank.
+the TTFT aggregates), the all-queued-at-shutdown edge cannot crash,
+percentiles are nearest-rank, retries are attributed by call kind,
+per-request rows carry deadline/admission-wait, and the slot audit log
+aggregates into utilization.
 """
 
 from repro.serving.metrics import MetricsRecorder
@@ -67,3 +69,70 @@ def test_percentiles_are_nearest_rank():
     assert s["ttft_ticks_p95"] == 19
     assert s["ttft_ticks_p50"] == 10
     assert s["ttft_ticks_mean"] == 10.5
+
+
+def test_retries_attributed_by_call_kind():
+    """on_retry(kind) lands in retries_by_kind — the old recorder took
+    the argument and dropped it, so "which executable kept failing" was
+    unanswerable from a summary."""
+    m = MetricsRecorder()
+    m.on_retry("decode")
+    m.on_retry("decode")
+    m.on_retry("prefill_parallel")
+    s = m.summary()
+    assert s["retries"] == 3
+    assert s["retries_by_kind"] == {"decode": 2, "prefill_parallel": 1}
+
+
+def test_per_request_carries_deadline_and_admission_wait():
+    """per_request() rows expose the SLO inputs: the deadline a request
+    was submitted with, and how long it queued before admission (the
+    queueing share of TTFT)."""
+    m = MetricsRecorder()
+    m.on_submit(0, prompt_len=4, gen_len=2, arrival=3, deadline=20)
+    m.on_submit(1, prompt_len=4, gen_len=2, arrival=0)
+    m.on_admit(0, tick=7)
+    rows = {r["rid"]: r for r in m.per_request()}
+    assert rows[0]["deadline"] == 20
+    assert rows[0]["admission_wait_ticks"] == 4      # admitted 7, arrived 3
+    assert rows[1]["deadline"] is None
+    assert rows[1]["admission_wait_ticks"] is None   # never admitted
+
+
+def test_slot_log_aggregates_into_utilization():
+    """record_slot_log turns the engine's interval audit log into
+    slot_busy_frac / per-slot occupancy; open intervals (still serving
+    at shutdown) count busy through the last tick."""
+    m = MetricsRecorder()
+    for tick in range(10):
+        m.on_tick(tick, queue_depth=0, n_prefilling=0, n_decoding=0,
+                  device_calls=1)
+    # slot 0: [0,4) then [6,10); slot 1: [2, open) -> busy to tick 10
+    m.record_slot_log([(0, 0, 4), (0, 6, 10), (1, 2, None)], n_slots=2)
+    s = m.summary()
+    assert s["slot_occupancy"] == [0.8, 0.8]
+    assert s["slot_busy_frac"] == 0.8
+
+
+def test_slot_metrics_none_without_log():
+    """Until the engine installs its audit log, utilization is an
+    explicit None, not a fabricated zero."""
+    s = MetricsRecorder().summary()
+    assert s["slot_busy_frac"] is None
+    assert s["slot_occupancy"] is None
+
+
+def test_device_call_latency_histogram_by_kind():
+    """Per-call dur_s lands in a per-kind log histogram; replay calls
+    are tagged separately so recovery latency is attributable."""
+    m = MetricsRecorder()
+    for _ in range(8):
+        m.on_device_call("decode", kind="decode", dur_s=0.010)
+    m.on_device_call("prefill", kind="prefill_parallel", replay=True,
+                     dur_s=0.040)
+    s = m.summary()
+    lat = s["call_latency_ms"]
+    assert set(lat) == {"decode", "prefill_parallel+replay"}
+    assert lat["decode"]["count"] == 8
+    assert abs(lat["decode"]["p50_ms"] - 10.0) / 10.0 < 0.10
+    assert s["calls_by_kind"]["prefill_parallel+replay"] == 1
