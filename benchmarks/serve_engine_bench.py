@@ -42,11 +42,25 @@ Guards (raise -> CI fails):
      weight_bytes — no byte is unattributed;
  10. the recompile sentinel reports exactly ONE compile per
      (call_kind, arch) after every engine run — the fixed-shape
-     no-recompile contract, measured not assumed.
+     no-recompile contract, measured not assumed;
+ 11. durability is PASSIVE — with the write-ahead journal and periodic
+     snapshots ON (no crash), outputs and device-call count are exactly
+     the bare run's;
+ 12. kill-chaos warm restart — the engine is killed (EngineCrash) at
+     two seeded ticks, restored from the latest snapshot + journal
+     tail, and every completed request's tokens are BITWISE identical
+     to the uninterrupted run, on BOTH smoke archs (attention, and SSM
+     under cfg.prefill_exact where chunk==decode must be exact);
+ 13. bounded redo — each restore's journal-evidenced re-prefilled
+     tokens <= snapshot_every x slots restored (the cadence-vs-
+     replay-work contract).
 
 The chaos run is traced end to end; its span/event/interval stream plus
 the waterfall is dumped to ``TRACE_serve_chaos.jsonl`` (a CI artifact)
-and rendered through ``repro.launch.report`` as a smoke test.
+and rendered through ``repro.launch.report`` as a smoke test. The
+restart case dumps its own artifacts the same way — one tracer spans
+the kill/restore chain (``TRACE_serve_restart.jsonl``) and the
+recovered journal is preserved as ``JOURNAL_serve_restart.jsonl``.
 
     PYTHONPATH=src python -m benchmarks.serve_engine_bench [--smoke] \
         [--out BENCH_serve_engine.json] [--trace-out TRACE.jsonl]
@@ -56,6 +70,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import shutil
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -66,8 +83,11 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import init_cache, init_params
 from repro.models.ssm import PARALLEL_PREFILL_ATOL
 from repro.obs import Tracer, serving_cost_by_kind, validate
-from repro.serving import FaultPlan, ServeEngine, WorkloadSpec, make_trace
-from repro.serving.faults import FAULT_KINDS
+from repro.serving import (EngineCrash, FaultPlan, ServeEngine,
+                           WorkloadSpec, make_trace)
+from repro.serving.faults import INJECTABLE_KINDS
+from repro.serving.faults import FaultEvent
+from repro.serving.journal import fold_records, read_journal
 from repro.sparsity.sparse_linear import (build_stacked_tables,
                                           strip_packed_projections)
 from .common import emit
@@ -108,6 +128,16 @@ CHAOS_SPEC = WorkloadSpec(n_requests=8, arrival_rate=0.8,
 CHAOS_FAULT_SEED = 3
 CHAOS_FAULT_RATE = 0.2
 CHAOS_GOODPUT_MIN = 0.9
+#: kill-chaos restart case: same workload shape as chaos but its own
+#: seed, the engine killed at two ticks derived from the uninterrupted
+#: run's length (1/3 and 2/3 through — mid-prefill-and-decode, the
+#: worst case for a restart). Snapshot cadence bounds redone work:
+#: each restore may re-prefill at most RESTART_SNAPSHOT_EVERY journal-
+#: evidenced tokens per restored slot (guard 13).
+RESTART_SPEC = WorkloadSpec(n_requests=6, arrival_rate=0.5,
+                            prompt_len=(3, 18), gen_len=(4, 8),
+                            dist="uniform", seed=17)
+RESTART_SNAPSHOT_EVERY = 4
 
 
 def _mk_cache(cfg):
@@ -394,7 +424,9 @@ def bench_chaos(arch: str = "tinyllama-1.1b",
     plan = FaultPlan.generate(seed=CHAOS_FAULT_SEED,
                               n_ticks=2 * ref_s["engine_ticks"],
                               rate=CHAOS_FAULT_RATE, n_slots=N_SLOTS)
-    missing = set(FAULT_KINDS) - {e.kind for e in plan.events}
+    # the sampler only ever emits the three INJECTABLE kinds —
+    # engine_crash is scheduled explicitly by the restart case below
+    missing = set(INJECTABLE_KINDS) - {e.kind for e in plan.events}
     if missing:
         raise RuntimeError(f"chaos plan (seed={CHAOS_FAULT_SEED}) lost "
                            f"fault kinds {missing} — re-pick the seed")
@@ -450,7 +482,7 @@ def bench_chaos(arch: str = "tinyllama-1.1b",
         "fault_plan": {"seed": CHAOS_FAULT_SEED, "rate": CHAOS_FAULT_RATE,
                        "n_events": len(plan.events),
                        "by_kind": {k: sum(e.kind == k for e in plan.events)
-                                   for k in FAULT_KINDS}},
+                                   for k in INJECTABLE_KINDS}},
         "goodput": s["goodput"],
         "goodput_min": CHAOS_GOODPUT_MIN,
         "bitwise_recovery": True,
@@ -474,8 +506,165 @@ def bench_chaos(arch: str = "tinyllama-1.1b",
     }
 
 
+def bench_restart(arch: str = "tinyllama-1.1b",
+                  trace_out: str = "",
+                  journal_out: str = "") -> dict:
+    """Crash-safe serving guard (BENCH key ``restart``): the engine is
+    KILLED at two seeded ticks (FaultPlan ``engine_crash`` ->
+    EngineCrash between ticks) and brought back with
+    ``ServeEngine.restore`` from the latest snapshot + write-ahead
+    journal tail. Guards 11-13:
+
+     11. durability passive — journal + snapshots ON, no crash: outputs
+         and device-call count exactly the bare run's;
+     12. bitwise warm restart — after >= 2 kill/restore cycles every
+         request's tokens are IDENTICAL to the uninterrupted run (the
+         chunk==decode invariant driving the restore re-prefill; the
+         SSM arch runs under cfg.prefill_exact so its chunks are exact
+         too);
+     13. bounded redo — per restore, journal-evidenced re-prefilled
+         tokens <= RESTART_SNAPSHOT_EVERY x slots restored.
+
+    One tracer spans the whole kill/restore chain (crash, restore and
+    snapshot events interleaved with the serving spans) and is dumped
+    to ``trace_out``; the recovered journal — the single file that
+    tells the run's whole story — is copied to ``journal_out``.
+    """
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint")
+    if cfg.supports_parallel_prefill:
+        # restart re-prefill must be BITWISE, so the SSM serves exact
+        # per-token chunks (the parallel form is tolerance-equivalent)
+        cfg = cfg.scaled(prefill_exact=True)
+    mesh = make_test_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    params = strip_packed_projections(params, cfg)
+    trace = make_trace(RESTART_SPEC, cfg.vocab_size)
+
+    def mk(**kw):
+        return ServeEngine(cfg, params, mesh=mesh, n_slots=N_SLOTS,
+                           max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                           stacked_tables=tables, **kw)
+
+    ref_engine = mk()
+    ref_out = ref_engine.run(trace)
+    ref_s = ref_engine.metrics.summary()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # guard 11: durability ON, no crash — exactly the bare run
+        eng = mk(journal=os.path.join(tmp, "passive.jsonl"),
+                 snapshot_dir=os.path.join(tmp, "passive-snaps"),
+                 snapshot_every=RESTART_SNAPSHOT_EVERY)
+        out = eng.run(trace)
+        s = eng.metrics.summary()
+        if out != ref_out:
+            raise RuntimeError(
+                f"{arch}: journal + snapshots changed the generated "
+                "tokens — the durability layer is not passive")
+        if s["device_calls"] != ref_s["device_calls"]:
+            raise RuntimeError(
+                f"{arch}: journal + snapshots changed the device-call "
+                f"count ({s['device_calls']} vs {ref_s['device_calls']}) "
+                "— the durability layer is not passive")
+
+        # guard 12/13: kill at two ticks mid-run, restore, finish
+        ticks = ref_s["engine_ticks"]
+        crash_ticks = sorted({max(2, ticks // 3),
+                              max(4, (2 * ticks) // 3)})
+        plan = FaultPlan(events=tuple(
+            FaultEvent(tick=t, kind="engine_crash") for t in crash_ticks))
+        tracer = Tracer(arch=cfg.name, meta={
+            "case": "restart", "n_slots": N_SLOTS,
+            "prefill_chunk": PREFILL_CHUNK,
+            "snapshot_every": RESTART_SNAPSHOT_EVERY,
+            "crash_ticks": list(crash_ticks)})
+        jpath = os.path.join(tmp, "journal.jsonl")
+        snapdir = os.path.join(tmp, "snaps")
+        engine = mk(journal=jpath, snapshot_dir=snapdir,
+                    snapshot_every=RESTART_SNAPSHOT_EVERY,
+                    fault_plan=plan, tracer=tracer)
+        crashes, outputs, restores = 0, None, []
+        try:
+            outputs = engine.run(trace)
+        except EngineCrash:
+            crashes += 1
+        while outputs is None:
+            engine = ServeEngine.restore(
+                cfg, params, snapshot_dir=snapdir, journal_path=jpath,
+                mesh=mesh, stacked_tables=tables, fault_plan=plan,
+                tracer=tracer)
+            st = engine.restore_stats
+            restores.append(st)
+            if st["replayed_prefill_tokens"] > \
+                    RESTART_SNAPSHOT_EVERY * max(st["slots_restored"], 1):
+                raise RuntimeError(
+                    f"{arch}: restore replayed "
+                    f"{st['replayed_prefill_tokens']} prefill tokens for "
+                    f"{st['slots_restored']} slots — over the "
+                    f"snapshot_every={RESTART_SNAPSHOT_EVERY} bound")
+            try:
+                outputs = engine.resume()
+            except EngineCrash:
+                crashes += 1
+        if crashes != len(crash_ticks):
+            raise RuntimeError(
+                f"{arch}: {crashes} crashes fired, expected "
+                f"{len(crash_ticks)} at ticks {crash_ticks}")
+        if outputs != ref_out:
+            raise RuntimeError(
+                f"{arch}: restarted run's tokens differ from the "
+                "uninterrupted run — warm restart is not bitwise")
+
+        # the recovered journal alone must replay the full token story
+        recs, _, torn = read_journal(jpath)
+        if torn:
+            raise RuntimeError(f"{arch}: final journal has a torn tail")
+        if {r: t for r, t in fold_records(recs)["tokens"].items()} \
+                != ref_out:
+            raise RuntimeError(
+                f"{arch}: journal token records do not reproduce the "
+                "generated streams")
+
+        trace_stats = validate(tracer.records)
+        if journal_out:
+            shutil.copyfile(jpath, journal_out)
+            print(f"[serve_engine_bench] restart journal -> {journal_out} "
+                  f"({len(recs)} records)")
+    if trace_out:
+        tracer.dump(trace_out)
+        print(f"[serve_engine_bench] restart trace -> {trace_out} "
+              f"({trace_stats})")
+
+    return {
+        "arch": cfg.name, "n_slots": N_SLOTS, "max_len": MAX_LEN,
+        "prefill_chunk": PREFILL_CHUNK,
+        "prefill_exact": bool(cfg.supports_parallel_prefill),
+        "snapshot_every": RESTART_SNAPSHOT_EVERY,
+        "workload": {"n_requests": RESTART_SPEC.n_requests,
+                     "arrival_rate": RESTART_SPEC.arrival_rate,
+                     "prompt_len": RESTART_SPEC.prompt_len,
+                     "gen_len": RESTART_SPEC.gen_len,
+                     "dist": RESTART_SPEC.dist, "seed": RESTART_SPEC.seed},
+        "engine_ticks_uninterrupted": ticks,
+        "crash_ticks": list(crash_ticks),
+        "n_crashes": crashes,
+        "restores": restores,
+        "replayed_prefill_tokens": sum(
+            st["replayed_prefill_tokens"] for st in restores),
+        "journal_records": len(recs),
+        "durability_passive": True,
+        "bitwise_restart": True,
+        "trace_out": trace_out or None,
+        "journal_out": journal_out or None,
+        "trace_stats": trace_stats,
+        "pass": True,
+    }
+
+
 def run(smoke: bool = False, out: str = "BENCH_serve_engine.json",
-        trace_out: str = "TRACE_serve_chaos.jsonl"):
+        trace_out: str = "TRACE_serve_chaos.jsonl",
+        restart_trace_out: str = "TRACE_serve_restart.jsonl",
+        restart_journal_out: str = "JOURNAL_serve_restart.jsonl"):
     # smoke covers BOTH archs: mamba2's parallel-prefill traffic contract
     # (guard 4) is a CI guard, not a local-only measurement
     archs = ARCHS
@@ -507,11 +696,29 @@ def run(smoke: bool = False, out: str = "BENCH_serve_engine.json",
         f"faults={chaos['faults_detected']} replays={chaos['replays']} "
         f"bitwise_recovery={chaos['bitwise_recovery']} "
         f"traced_zero_overhead={chaos['zero_overhead_traced']}"))
+    # kill-chaos restart on both smoke archs (attention + exact SSM);
+    # artifacts come from the attention run
+    restart = {}
+    for arch in ("tinyllama-1.1b", "mamba2-1.3b"):
+        first = arch == "tinyllama-1.1b"
+        r = bench_restart(
+            arch,
+            trace_out=restart_trace_out if first else "",
+            journal_out=restart_journal_out if first else "")
+        restart[r["arch"]] = r
+        rows.append((
+            f"serve_engine.restart.{r['arch']}", 0.0,
+            f"crashes={r['n_crashes']}@{r['crash_ticks']} "
+            f"replayed_prefill_tokens={r['replayed_prefill_tokens']} "
+            f"(cadence {r['snapshot_every']}) "
+            f"bitwise_restart={r['bitwise_restart']} "
+            f"durability_passive={r['durability_passive']}"))
     emit(rows)
     payload = {"smoke": smoke, "archs": records, "schedule": sched,
-               "chaos": chaos,
+               "chaos": chaos, "restart": restart,
                "pass": all(r["pass"] for r in records.values())
-               and sched["pass"] and chaos["pass"]}
+               and sched["pass"] and chaos["pass"]
+               and all(r["pass"] for r in restart.values())}
     if out:
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)
@@ -532,6 +739,16 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_serve_engine.json")
     ap.add_argument("--trace-out", default="TRACE_serve_chaos.jsonl",
                     help="chaos-case trace artifact (JSONL; '' disables)")
+    ap.add_argument("--restart-trace-out",
+                    default="TRACE_serve_restart.jsonl",
+                    help="restart-case trace artifact spanning the "
+                         "kill/restore chain (JSONL; '' disables)")
+    ap.add_argument("--restart-journal-out",
+                    default="JOURNAL_serve_restart.jsonl",
+                    help="restart-case recovered write-ahead journal "
+                         "artifact ('' disables)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke, out=args.out, trace_out=args.trace_out)
+    run(smoke=args.smoke, out=args.out, trace_out=args.trace_out,
+        restart_trace_out=args.restart_trace_out,
+        restart_journal_out=args.restart_journal_out)

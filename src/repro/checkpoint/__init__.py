@@ -1,2 +1,2 @@
-from .checkpoint import (CheckpointManager, load_checkpoint,  # noqa: F401
-                         save_checkpoint)
+from .checkpoint import (CheckpointManager, latest_step,  # noqa: F401
+                         load_checkpoint, save_checkpoint)

@@ -3,8 +3,14 @@
 Format: one directory per step containing <leaf-path>.npy files plus a
 manifest (tree structure + step + rng + dataset cursor). Writes go to a
 tmp dir then os.replace() — a crash mid-write never corrupts the latest
-checkpoint (fault-tolerance requirement). A background thread makes
-save() non-blocking (training continues during I/O); `keep` bounds disk.
+checkpoint (fault-tolerance requirement). Durability is explicit, not
+assumed: every written file, the tmp dir, and the parent dir after the
+rename are fsync'd, so once save() returns the checkpoint survives a
+power cut — os.replace alone is only atomic against OTHER renames; the
+kernel was still free to lose both the data and the rename itself. A
+background thread makes save() non-blocking (training continues during
+I/O); `keep` bounds disk. Stale ``.tmp-*`` dirs from killed writers are
+swept on the next save and are invisible to latest_step/load.
 
 On real multi-host pods each host writes only the shards it owns
 (process-local addressable shards); on this single-process container that
@@ -43,10 +49,24 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _fsync_path(path):
+    """fsync a file or directory by path — force the DATA (or the dir's
+    entries) to disk, not just into the page cache."""
+    fd = os.open(str(path), os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree,
                     extra: Optional[dict] = None, keep: int = 3) -> str:
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
+    # sweep leftovers of writers that died mid-save (different pid, or a
+    # previous incarnation of this one) — published steps never match
+    for stale in ckpt_dir.glob(".tmp-*"):
+        shutil.rmtree(stale, ignore_errors=True)
     tmp = ckpt_dir / f".tmp-{step}-{os.getpid()}"
     if tmp.exists():
         shutil.rmtree(tmp)
@@ -65,10 +85,17 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
                                  "dtype": logical,
                                  "shape": list(arr.shape)})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # durability barrier, in dependency order: file data first, then the
+    # tmp dir's entries, THEN the rename, then the parent dir so the
+    # rename itself is on disk before the caller is told the step exists
+    for f in tmp.iterdir():
+        _fsync_path(f)
+    _fsync_path(tmp)
     final = ckpt_dir / f"step_{step:010d}"
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)                    # atomic publish
+    _fsync_path(ckpt_dir)
     _gc(ckpt_dir, keep)
     return str(final)
 

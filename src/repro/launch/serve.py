@@ -44,6 +44,16 @@ waterfall and dumps it as JSONL — render with ``python -m
 repro.launch.report trace.jsonl`` or convert for Perfetto with
 ``--chrome``. Tracing is passive: outputs and device-call count are
 bitwise identical to an untraced run.
+
+Durability (serving.journal, serving.snapshot): ``--journal PATH``
+appends a CRC-framed write-ahead record of every request transition
+(fsync'd once per tick); ``--snapshot-dir DIR --snapshot-every N``
+writes an atomic engine snapshot every N ticks. After a crash,
+``--restore`` (with the same journal/snapshot flags) rebuilds the
+engine from the latest snapshot + journal tail and resumes every
+stream bitwise where the dead process left off (``--prefill-exact``
+required for bitwise SSM restarts). Both layers are passive: with
+them on, outputs and device-call count are identical to a bare run.
 """
 
 from __future__ import annotations
@@ -58,6 +68,16 @@ from repro.configs import get_config
 from repro.models import init_params
 from repro.models.transformer import encode
 from repro.serving import ServeEngine, WorkloadSpec, make_trace
+
+
+def _spec_from(args) -> WorkloadSpec:
+    return WorkloadSpec(n_requests=args.requests,
+                        arrival_rate=args.arrival_rate,
+                        prompt_len=tuple(args.prompt_len),
+                        gen_len=(args.gen_len, args.gen_len),
+                        dist=args.dist, seed=args.seed,
+                        deadline_slack=getattr(args, "deadline_slack",
+                                               None))
 
 
 def build_engine_and_trace(args, cfg):
@@ -105,9 +125,26 @@ def build_engine_and_trace(args, cfg):
     tracer = None
     if getattr(args, "trace_out", None):
         from repro.obs import Tracer
+        # path= makes EngineStuckError dump the trace pre-raise, so a
+        # wedged run is diagnosable after the process is gone
         tracer = Tracer(arch=cfg.name, meta={
             "n_slots": args.batch, "prefill_chunk": args.prefill_chunk,
-            "schedule": args.schedule, "seed": args.seed})
+            "schedule": args.schedule, "seed": args.seed},
+            path=args.trace_out)
+
+    if getattr(args, "restore", False):
+        if not getattr(args, "snapshot_dir", None):
+            raise SystemExit("--restore requires --snapshot-dir")
+        engine = ServeEngine.restore(
+            cfg, params, snapshot_dir=args.snapshot_dir,
+            journal_path=getattr(args, "journal", None),
+            stacked_tables=stacked_tables, enc_out=enc_out,
+            fault_plan=fault_plan, tracer=tracer)
+        print(f"[serve] restored from snapshot step "
+              f"{engine.restore_stats['from_step']}: "
+              f"{engine.restore_stats}")
+        return engine, make_trace(
+            _spec_from(args), cfg.vocab_size)
 
     engine = ServeEngine(cfg, params, n_slots=args.batch,
                          max_len=args.max_len,
@@ -122,15 +159,12 @@ def build_engine_and_trace(args, cfg):
                          max_step_retries=getattr(args, "max_step_retries",
                                                   2),
                          max_replays=getattr(args, "max_replays", 3),
-                         tracer=tracer)
-    spec = WorkloadSpec(n_requests=args.requests,
-                        arrival_rate=args.arrival_rate,
-                        prompt_len=tuple(args.prompt_len),
-                        gen_len=(args.gen_len, args.gen_len),
-                        dist=args.dist, seed=args.seed,
-                        deadline_slack=getattr(args, "deadline_slack",
-                                               None))
-    return engine, make_trace(spec, cfg.vocab_size)
+                         tracer=tracer,
+                         journal=getattr(args, "journal", None),
+                         snapshot_dir=getattr(args, "snapshot_dir", None),
+                         snapshot_every=getattr(args, "snapshot_every", 0),
+                         snapshot_keep=getattr(args, "snapshot_keep", 2))
+    return engine, make_trace(_spec_from(args), cfg.vocab_size)
 
 
 def main(argv=None):
@@ -202,6 +236,24 @@ def main(argv=None):
                     help="dump the structured two-clock trace (spans, "
                          "events, slot intervals, weight waterfall) as "
                          "JSONL; render with python -m repro.launch.report")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal (CRC-framed JSONL, "
+                         "fsync'd once per tick); with --restore, the "
+                         "journal to fold over the snapshot")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="directory for periodic atomic engine snapshots "
+                         "(cache + state machine + queue + metrics)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in ticks (0 = never); bounds "
+                         "post-crash redo work to this many tokens per "
+                         "active slot")
+    ap.add_argument("--snapshot-keep", type=int, default=2,
+                    help="published snapshots retained on disk")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm-restart: rebuild from the latest snapshot "
+                         "in --snapshot-dir plus the --journal tail and "
+                         "resume every stream bitwise (skips submission "
+                         "— the trace is already in the journal)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced,
@@ -215,7 +267,7 @@ def main(argv=None):
         print(f"[serve] prefill chunk math: {engine.prefill_kind} "
               f"(schedule={engine.schedule})")
 
-    outputs = engine.run(trace)
+    outputs = engine.resume() if args.restore else engine.run(trace)
     s = engine.metrics.summary()
     print(f"[serve] {s['n_completed']}/{s['n_requests']} requests, "
           f"{s['generated_tokens']} tokens in {s['engine_ticks']} ticks / "

@@ -119,6 +119,14 @@ SERVE_CALL_KINDS = ("serve", "decode", "prefill_chunk")
 #: of the base kind to price recovery overhead.
 REPLAY_TAG = "+replay"
 
+#: Same idea for WARM-RESTART traffic: after ServeEngine.restore, every
+#: active slot re-prefills its durable record (prompt + journaled
+#: tokens) through the same executable, and those calls are metered
+#: "<kind>+restore". Restart replay is the cost snapshot cadence trades
+#: against (work redone <= ticks since the last snapshot), so it must
+#: be attributable separately from in-engine fault replays.
+RESTORE_TAG = "+restore"
+
 
 def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
                stacked_tables=None, int8_weights: bool = False):

@@ -18,8 +18,8 @@ Record taxonomy (one JSON object per line in the JSONL dump):
   meta        version, arch, plus engine config (first record)
   span        name ("tick" | "call"), tick, ts_us, dur_us, attrs
   event       name (admit | prefill | first_token | quarantine |
-              replay | shed | reject | release | fault | retry),
-              tick, ts_us, attrs
+              replay | shed | reject | release | fault | retry |
+              crash | snapshot | restore), tick, ts_us, attrs
   interval    slot, rid, admit_tick, release_tick — one closed
               SlotInterval from the engine's slot audit log
   waterfall   kind, total, rows {param path -> weight bytes} — the
@@ -48,9 +48,13 @@ TRACE_VERSION = 1
 
 #: span names the engine emits; anything else fails validation
 SPAN_NAMES = ("tick", "call")
-#: instant-event names the engine emits
+#: instant-event names the engine emits; crash/snapshot/restore are the
+#: durability lifecycle (serving.journal / serving.snapshot) — one
+#: tracer may span a kill + warm restart, and stays valid because the
+#: restored engine resumes at a strictly later tick
 EVENT_NAMES = ("admit", "prefill", "first_token", "quarantine", "replay",
-               "shed", "reject", "release", "fault", "retry")
+               "shed", "reject", "release", "fault", "retry",
+               "crash", "snapshot", "restore")
 
 
 class TraceError(RuntimeError):
@@ -61,8 +65,13 @@ class TraceError(RuntimeError):
 class Tracer:
     """Collects span/event/interval records; ``dump`` writes JSONL."""
 
-    def __init__(self, arch: Optional[str] = None, meta: Optional[dict] = None):
+    def __init__(self, arch: Optional[str] = None, meta: Optional[dict] = None,
+                 path: Optional[str] = None):
         self._wall0 = time.perf_counter()
+        #: where this trace is meant to be dumped (advisory). The engine
+        #: uses it for post-mortems: EngineStuckError dumps here and
+        #: attaches the path, so a hung run is diagnosable offline.
+        self.path = path
         self.records: List[dict] = [{
             "type": "meta", "version": TRACE_VERSION, "arch": arch,
             **(meta or {})}]

@@ -107,6 +107,29 @@ traced run (the zero-overhead contract the chaos bench guards):
   * every device call's wall latency feeds a log-bucketed per-kind
     histogram (metrics.summary()["call_latency_ms"]: p50/p95/p99
     without storing raw samples).
+
+Durability (serving.journal + serving.snapshot) — crash-safe serving,
+PASSIVE like the tracer (``journal=None`` is bitwise/count-identical):
+
+  * ``journal=<path>`` appends a CRC-framed record for every
+    request-visible transition (submit/admit/token/done/shed/reject),
+    fsync'd ONCE per tick; ``snapshot_dir`` + ``snapshot_every`` write
+    periodic atomic snapshots (cache + state machine + queue + metrics)
+    via the checkpoint layer's tmp-dir + fsync + os.replace publish.
+  * ``ServeEngine.restore(cfg, params, snapshot_dir=...,
+    journal_path=...)`` rebuilds from the latest snapshot, folds the
+    journal tail over it, and re-prefills each active slot's durable
+    record through the PR 7 replay path — then ``resume()`` continues
+    the streams BITWISE where the dead process left off (the chunk ==
+    decode invariant again; ``cfg.prefill_exact`` for SSM parallel
+    prefill). Redone work is bounded by snapshot cadence: at most
+    ``snapshot_every`` journal-evidenced tokens per active slot
+    (restore_stats["replayed_prefill_tokens"], metered under
+    "<kind>+restore").
+  * the kill-chaos harness: a FaultPlan ``engine_crash`` event kills
+    the engine (EngineCrash) between ticks after the journal commit;
+    benchmarks/serve_engine_bench.py's restart case kills/restores at
+    seeded ticks and guards stream equality + the replay bound.
 """
 
 from __future__ import annotations
@@ -128,7 +151,8 @@ from repro.models import init_cache, reset_slots
 from repro.obs import RecompileSentinel, Tracer
 from repro.runtime import sharding as shr
 from repro.runtime.fault import StragglerMonitor
-from repro.serving.faults import FaultPlan, corrupt_cache
+from repro.serving.faults import EngineCrash, FaultPlan, corrupt_cache
+from repro.serving.journal import Journal
 from repro.serving.metrics import MetricsRecorder
 from repro.serving.prefill import (PREFILL_MODES, assemble_chunk,
                                    build_chunk_step)
@@ -155,6 +179,8 @@ class _Slot:
     fault_count: int = 0                 # quarantines charged to this slot
     replay: bool = False                 # prefilling a post-fault record
     #                                      (suppress first-token metrics)
+    restore: bool = False                # prefilling a warm-restart record
+    #                                      (meter calls under "+restore")
 
 
 @dataclass
@@ -169,16 +195,23 @@ class SlotInterval:
 
 class EngineStuckError(RuntimeError):
     """max_ticks exceeded — the scheduler wedged. Carries everything a
-    post-mortem needs: completed outputs so far, the slot audit log, and
-    the metrics summary (the bare RuntimeError used to discard all
-    three)."""
+    post-mortem needs: completed outputs so far, the slot audit log, the
+    metrics summary (the bare RuntimeError used to discard all three),
+    and — when the engine was configured with a journal / a tracer that
+    knows its dump path — the ON-DISK artifact paths, committed/dumped
+    before the raise so the hang is diagnosable after the process is
+    gone."""
 
     def __init__(self, msg: str, *, outputs: Dict[int, List[int]],
-                 slot_log: List[SlotInterval], summary: dict):
+                 slot_log: List[SlotInterval], summary: dict,
+                 journal_path: Optional[str] = None,
+                 trace_path: Optional[str] = None):
         super().__init__(msg)
         self.outputs = outputs
         self.slot_log = slot_log
         self.summary = summary
+        self.journal_path = journal_path
+        self.trace_path = trace_path
 
 
 class ServeEngine:
@@ -201,7 +234,9 @@ class ServeEngine:
                  fault_plan: Optional[FaultPlan] = None,
                  max_step_retries: int = 2, max_replays: int = 3,
                  tracer: Optional[Tracer] = None,
-                 recompile_sentinel: bool = True):
+                 recompile_sentinel: bool = True,
+                 journal=None, snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0, snapshot_keep: int = 2):
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
                              f"{PREFILL_MODES}")
@@ -229,6 +264,19 @@ class ServeEngine:
         self.max_step_retries = max_step_retries
         self.max_replays = max_replays
         self.tracer = tracer
+        # -- durability layer (all host-side: journaling/snapshotting
+        # never issue device calls, so journal=None vs a live journal is
+        # bitwise-output- and device-call-count-identical — the same
+        # passivity contract the tracer carries) ------------------------
+        if snapshot_every and not snapshot_dir:
+            raise ValueError("snapshot_every set without snapshot_dir")
+        self.journal: Optional[Journal] = (
+            journal if isinstance(journal, Journal) or journal is None
+            else Journal(str(journal)))
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.snapshot_keep = snapshot_keep
+        self.restore_stats: Optional[dict] = None
 
         self.params = params
         self.stacked_tables = stacked_tables
@@ -253,6 +301,9 @@ class ServeEngine:
             # variant at tick 1 (the recompile sentinel caught this)
             self.cache = jax.device_put(self.cache,
                                         shr.named(cspec, self.mesh))
+            # kept for restore: a snapshot's host cache re-enters the
+            # device under the exact serving sharding
+            self._cache_sharding = shr.named(cspec, self.mesh)
             # out_shardings pin the returned cache to the SAME spec the
             # steps take it with: left to propagation, XLA hands attn
             # k/v back replicated, and every consumer (reset, prefill)
@@ -304,6 +355,9 @@ class ServeEngine:
         self.outputs: Dict[int, List[int]] = {}
         self.first_logits: Dict[int, np.ndarray] = {}
         self.rejected: Dict[int, str] = {}   # rid -> rejection reason
+        self.duplicate_rids: List[int] = []  # re-submitted rids (rejected
+        #                                      without touching the
+        #                                      original's row or outputs)
         self.slot_log: List[SlotInterval] = []
         self._open_interval: Dict[int, SlotInterval] = {}
         self._has_deadlines = False
@@ -314,11 +368,22 @@ class ServeEngine:
 
     def submit(self, request: Request) -> bool:
         """Queue a request; returns False if it was REJECTED instead
-        (oversized, or the bounded queue is full). Rejections are
-        recorded (metrics.on_reject, ``self.rejected``), never raised —
-        one malformed request must not abort a whole trace. Construct
-        the engine with ``strict=True`` to get the hard ValueError back
-        for oversized requests (tests / offline traces)."""
+        (oversized, the bounded queue is full, or the rid was already
+        submitted — accepting a duplicate rid would silently merge two
+        requests' token streams in ``self.outputs`` and corrupt journal
+        keying). Rejections are recorded (metrics.on_reject,
+        ``self.rejected`` / ``self.duplicate_rids``), never raised — one
+        malformed request must not abort a whole trace. Construct the
+        engine with ``strict=True`` to get the hard ValueError back
+        (tests / offline traces). Submissions become DURABLE at the next
+        journal commit (run() commits once after queueing a trace;
+        direct submit() callers inherit the next tick's commit)."""
+        if request.rid in self.metrics.requests:
+            if self.strict:
+                raise ValueError(
+                    f"request {request.rid}: duplicate rid (already "
+                    f"submitted)")
+            return self._reject(request, "duplicate_rid")
         total = request.prompt_len + request.gen_len
         if total > self.max_len:
             if self.strict:
@@ -335,13 +400,34 @@ class ServeEngine:
         self.metrics.on_submit(request.rid, request.prompt_len,
                                request.gen_len, request.arrival,
                                deadline=request.deadline)
+        if self.journal is not None:
+            self.journal.append(
+                "submit", self.tick_count, rid=int(request.rid),
+                prompt=[int(t) for t in request.prompt],
+                gen_len=int(request.gen_len),
+                arrival=float(request.arrival),
+                deadline=(None if request.deadline is None
+                          else float(request.deadline)))
         return True
 
     def _reject(self, request: Request, reason: str) -> bool:
-        self.rejected[request.rid] = reason
+        if reason == "duplicate_rid":
+            # the rid's ORIGINAL request is live (or finished) — don't
+            # let the duplicate's reason clobber its results entry
+            self.duplicate_rids.append(request.rid)
+        else:
+            self.rejected[request.rid] = reason
         self.metrics.on_reject(request.rid, request.prompt_len,
                                request.gen_len, request.arrival, reason,
                                deadline=request.deadline)
+        if self.journal is not None:
+            self.journal.append(
+                "reject", self.tick_count, rid=int(request.rid),
+                reason=reason, prompt_len=int(request.prompt_len),
+                gen_len=int(request.gen_len),
+                arrival=float(request.arrival),
+                deadline=(None if request.deadline is None
+                          else float(request.deadline)))
         if self.tracer is not None:
             self.tracer.event("reject", self.tick_count, rid=request.rid,
                               reason=reason)
@@ -353,21 +439,57 @@ class ServeEngine:
         ``self.rejected`` / metrics instead)."""
         for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             self.submit(r)
+        if self.journal is not None:
+            self.journal.commit()   # the accepted trace is durable
+            #                         before any serving work happens
+        return self._serve_loop()
+
+    def resume(self):
+        """Continue serving after ``ServeEngine.restore`` — the same
+        loop as run() without re-submitting anything (the queue and
+        slots were rebuilt from the snapshot + journal tail; calling
+        run() on a restored engine would just reject every request as
+        ``duplicate_rid``)."""
+        return self._serve_loop()
+
+    def _serve_loop(self):
         self.metrics.start()
         while self.queue or any(s.state is not SlotState.FREE
                                 for s in self.slots):
             self.tick()
+            if self.fault_plan is not None and \
+                    self.fault_plan.crash_at(self.tick_count - 1):
+                # simulated process kill BETWEEN ticks: the completed
+                # tick's journal batch is already committed (tick() ends
+                # with the commit), so a restored engine resumes at
+                # tick_count — strictly past the event, which therefore
+                # never re-fires
+                if self.tracer is not None:
+                    self.tracer.event("crash", self.tick_count - 1)
+                raise EngineCrash(
+                    f"injected engine crash after tick "
+                    f"{self.tick_count - 1}", tick=self.tick_count - 1)
             if self.tick_count > self.max_ticks:
                 self._record_slot_log()
                 self.metrics.stop()
+                journal_path = trace_path = None
+                if self.journal is not None:
+                    self.journal.commit()
+                    journal_path = self.journal.path
+                if self.tracer is not None and self.tracer.path:
+                    self.tracer.dump(self.tracer.path)
+                    trace_path = self.tracer.path
                 raise EngineStuckError(
                     f"engine exceeded max_ticks={self.max_ticks}; "
                     f"scheduler stuck?",
                     outputs=dict(self.outputs),
                     slot_log=list(self.slot_log),
-                    summary=self.metrics.summary())
+                    summary=self.metrics.summary(),
+                    journal_path=journal_path, trace_path=trace_path)
         self._record_slot_log()
         self.metrics.stop()
+        if self.journal is not None:
+            self.journal.commit()
         return self.outputs
 
     def _record_slot_log(self):
@@ -376,6 +498,69 @@ class ServeEngine:
         self.metrics.record_slot_log(
             [(iv.slot, iv.admit_tick, iv.release_tick)
              for iv in self.slot_log], self.n_slots)
+
+    # ------------------------------------------------- durability layer
+
+    def save_snapshot(self) -> str:
+        """Write one atomic engine snapshot (serving.snapshot) — called
+        automatically every ``snapshot_every`` ticks, or manually at any
+        between-ticks point. Host-side only plus a device->host copy of
+        the cache: no device calls, so snapshotting never perturbs the
+        token streams."""
+        from repro.serving.snapshot import save_snapshot
+        path = save_snapshot(self)
+        if self.tracer is not None:
+            self.tracer.event("snapshot", self.tick_count,
+                              step=self.tick_count, path=path)
+        return path
+
+    @classmethod
+    def restore(cls, cfg, params, *, snapshot_dir: str,
+                journal_path: Optional[str] = None,
+                step: Optional[int] = None, mesh=None,
+                stacked_tables=None, enc_out=None,
+                fault_plan: Optional[FaultPlan] = None,
+                tracer: Optional[Tracer] = None,
+                recompile_sentinel: bool = True,
+                journal_fsync: bool = True, **overrides) -> "ServeEngine":
+        """Bring up a replacement engine from the latest (or ``step``)
+        snapshot plus the journal tail — the warm-restart path after a
+        crash (EngineCrash in tests/benches; a real kill in production).
+
+        Geometry and policy knobs (n_slots, max_len, prefill_chunk,
+        prefill_mode, schedule, ...) come from the snapshot manifest;
+        ``overrides`` can replace the policy ones, but the cache
+        geometry must match or restore refuses. The caller re-supplies
+        what is NOT durable state: cfg/params/tables (weights are the
+        training checkpoint's business, not the serving snapshot's) and
+        runtime objects (fault_plan, tracer — pass the same tracer to
+        span the restart in one trace).
+
+        The journal is reopened in resume mode (torn tail truncated at
+        the first bad frame) and further records append after the last
+        good one. Call ``resume()`` on the returned engine to continue
+        serving; every active slot finishes a chunked re-prefill of
+        ``prompt + journaled tokens`` and the streams continue bitwise
+        (cfg.prefill_exact where the SSM parallel path must be exact).
+        ``restore_stats`` carries the replay-work accounting the
+        kill-chaos bench bounds by snapshot cadence."""
+        from repro.serving.snapshot import (read_snapshot_meta,
+                                            restore_engine_state)
+        step, extra = read_snapshot_meta(snapshot_dir, step)
+        kw = {k: extra["engine"][k] for k in
+              ("n_slots", "max_len", "prefill_chunk", "prefill_mode",
+               "schedule", "spf_age_cap", "max_ticks", "strict",
+               "queue_cap", "max_step_retries", "max_replays",
+               "snapshot_every", "snapshot_keep")}
+        kw.update(overrides)
+        engine = cls(cfg, params, mesh=mesh, stacked_tables=stacked_tables,
+                     enc_out=enc_out, fault_plan=fault_plan, tracer=tracer,
+                     recompile_sentinel=recompile_sentinel,
+                     journal=None, snapshot_dir=snapshot_dir, **kw)
+        restore_engine_state(engine, snapshot_dir, step,
+                             journal_path=journal_path,
+                             journal_fsync=journal_fsync)
+        return engine
 
     # ------------------------------------------------------------- one tick
 
@@ -402,10 +587,20 @@ class ServeEngine:
             self.tracer.end(span, queue_depth=qd, n_prefilling=n_pre,
                             n_decoding=n_dec, device_calls=calls)
         self.tick_count += 1
+        if self.journal is not None:
+            # ONE write + fsync for the whole tick's batch (admits,
+            # tokens, terminal events) — durability costs one fsync per
+            # tick however many requests moved; a kill can only lose
+            # the current tick's uncommitted records, which restore
+            # re-derives bitwise
+            self.journal.commit()
         if self.straggler.record(time.monotonic() - t0):
             self.metrics.on_straggler(tick)
         if self.sentinel is not None:
             self.sentinel.check()
+        if self.snapshot_every and \
+                self.tick_count % self.snapshot_every == 0:
+            self.save_snapshot()
 
     # -------------------------------------------------------------- phases
 
@@ -468,6 +663,9 @@ class ServeEngine:
             self.outputs[req.rid] = []
             skips = self.skips.pop(req.rid, 0)
             self.metrics.on_admit(req.rid, tick, skips=skips)
+            if self.journal is not None:
+                self.journal.append("admit", tick, rid=int(req.rid),
+                                    slot=s, skips=skips)
             if self.tracer is not None:
                 self.tracer.event("admit", tick, rid=req.rid, slot=s,
                                   wait=tick - req.arrival, skips=skips)
@@ -486,11 +684,12 @@ class ServeEngine:
         tokens, n_valid = assemble_chunk(prefilling, cursors, self.n_slots,
                                          self.prefill_chunk)
         replaying = any(self.slots[s].replay for s in prefilling)
+        restoring = any(self.slots[s].restore for s in prefilling)
         span = (self.tracer.begin(
                     "call", tick, phase="prefill", kind=self.prefill_kind,
                     arch=self.cfg.name, participants=sorted(prefilling),
                     occupancy=len(prefilling) / self.n_slots,
-                    replay=replaying)
+                    replay=replaying, restore=restoring)
                 if self.tracer is not None else None)
         c0 = time.monotonic()
         res = self._device_call("prefill", self.prefill_kind,
@@ -505,7 +704,8 @@ class ServeEngine:
             return 0
         logits, self.cache = res
         self.metrics.on_device_call("prefill", kind=self.prefill_kind,
-                                    replay=replaying, dur_s=dur_s)
+                                    replay=replaying, restore=restoring,
+                                    dur_s=dur_s)
         lg = self._host_logits(logits, tick, "prefill")
         nxt = lg.argmax(axis=-1)
         for s in prefilling:
@@ -585,6 +785,9 @@ class ServeEngine:
             self.outputs[slot.rid].append(tok)
             slot.pending_token = tok
             self.metrics.on_token(slot.rid)
+            if self.journal is not None:
+                self.journal.append("token", tick, rid=int(slot.rid),
+                                    token=tok)
             if len(self.outputs[slot.rid]) >= slot.gen_len:
                 self._release(s, tick)
         return 1
@@ -670,6 +873,9 @@ class ServeEngine:
                               kind=kind, fault_count=slot.fault_count)
         if slot.fault_count > self.max_replays:
             self.metrics.on_shed(rid, tick, "fault_budget")
+            if self.journal is not None:
+                self.journal.append("shed", tick, rid=int(rid),
+                                    reason="fault_budget")
             if self.tracer is not None:
                 self.tracer.event("shed", tick, rid=rid, slot=s,
                                   reason="fault_budget")
@@ -685,6 +891,7 @@ class ServeEngine:
         slot.cursor = 0
         slot.pending_token = 0
         slot.replay = bool(emitted)
+        slot.restore = False              # a fault replay, not restart work
         slot.state = SlotState.PREFILLING
         if self.tracer is not None:
             self.tracer.event("replay", tick, rid=rid, slot=s,
@@ -719,6 +926,9 @@ class ServeEngine:
             if r.deadline is not None and tick + est - 1 > r.deadline:
                 self.skips.pop(r.rid, None)
                 self.metrics.on_shed(r.rid, tick, "deadline")
+                if self.journal is not None:
+                    self.journal.append("shed", tick, rid=int(r.rid),
+                                        reason="deadline")
                 if self.tracer is not None:
                     self.tracer.event("shed", tick, rid=r.rid,
                                       reason="deadline", where="queue")
@@ -739,6 +949,9 @@ class ServeEngine:
             if tick + self._min_ticks_to_done(prompt_left, gen_left) - 1 \
                     > slot.deadline:
                 self.metrics.on_shed(slot.rid, tick, "deadline")
+                if self.journal is not None:
+                    self.journal.append("shed", tick, rid=int(slot.rid),
+                                        reason="deadline")
                 if self.tracer is not None:
                     self.tracer.event("shed", tick, rid=slot.rid, slot=s,
                                       reason="deadline", where="slot")
@@ -763,7 +976,11 @@ class ServeEngine:
                 self.tracer.event("first_token", tick, rid=slot.rid,
                                   slot=s)
         slot.replay = False
+        slot.restore = False
         self.metrics.on_token(slot.rid)
+        if self.journal is not None:
+            self.journal.append("token", tick, rid=int(slot.rid),
+                                token=int(token))
         if len(self.outputs[slot.rid]) >= slot.gen_len:
             self._release(s, tick)
 
@@ -778,6 +995,8 @@ class ServeEngine:
     def _release(self, s: int, tick: int):
         slot = self.slots[s]
         self.metrics.on_done(slot.rid, tick)
+        if self.journal is not None:
+            self.journal.append("done", tick, rid=int(slot.rid))
         if self.tracer is not None:
             self.tracer.event("release", tick, rid=slot.rid, slot=s,
                               tokens=len(self.outputs[slot.rid]))

@@ -10,9 +10,10 @@ compared token-for-token (benchmarks/serve_engine_bench.py, BENCH key
 the plan itself is stateless at inject time (the engine passes the
 attempt number in), so one plan can drive many runs.
 
-Three fault kinds, chosen to cover the three places a serving step can
-go wrong on real hardware (cf. runtime.fault's ``failure_hook`` for the
-training loop — same philosophy, request-level granularity):
+Four fault kinds, covering the places a serving step can go wrong on
+real hardware plus the process itself (cf. runtime.fault's
+``failure_hook`` for the training loop — same philosophy, request-level
+granularity):
 
   * ``step_exception`` — the device call raises (host runtime /
     collective failure). Injected BEFORE dispatch, so the engine's
@@ -27,6 +28,21 @@ training loop — same philosophy, request-level granularity):
     direct detector — the poison surfaces as non-finite logits at the
     next device call that reads the slot, which is exactly how the
     engine is meant to catch it (detection-by-propagation).
+  * ``engine_crash``  — the whole PROCESS dies (OOM kill, node
+    preemption). Raised as :class:`EngineCrash` BETWEEN ticks, after
+    the completed tick's journal batch committed, so it models the
+    clean kill-point the write-ahead journal is fsync'd at; mid-tick
+    loss (a torn journal tail) is covered separately by the journal's
+    truncate-at-first-bad-frame recovery. The harness catches the
+    exception, abandons the engine object, and brings up a replacement
+    via ``ServeEngine.restore`` — the kill-chaos restart case in
+    benchmarks/serve_engine_bench.py guards that the restored streams
+    are bitwise identical to an uninterrupted run. Unlike the three
+    injectable kinds the engine survives in-place, ``engine_crash`` is
+    never sampled by :meth:`FaultPlan.generate` (see
+    ``INJECTABLE_KINDS``): a crash schedule is a harness-level choice,
+    and keeping it out of the sampler keeps every existing seeded
+    chaos schedule bit-identical.
 
 Poisoning uses the same layout-generic slot surgery as admission
 zeroing (models.decode.merge_slots): float leaves carry the batch on
@@ -44,13 +60,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-FAULT_KINDS = ("step_exception", "nan_logits", "cache_corruption")
+#: kinds the engine absorbs in-place (retry / quarantine / replay) —
+#: the only kinds FaultPlan.generate samples
+INJECTABLE_KINDS = ("step_exception", "nan_logits", "cache_corruption")
+#: all valid event kinds; "engine_crash" kills the process between ticks
+FAULT_KINDS = INJECTABLE_KINDS + ("engine_crash",)
 #: which engine device call an event may target
 FAULT_CALLS = ("decode", "prefill", "any")
 
 
 class InjectedFault(RuntimeError):
     """Raised by FaultPlan.check_step in place of a device-call failure."""
+
+
+class EngineCrash(RuntimeError):
+    """Simulated whole-process kill (fault kind "engine_crash"): raised
+    by the engine between ticks, after the finished tick's journal
+    batch was committed. Nothing about the engine object is usable
+    afterwards — the harness discards it and rebuilds with
+    ``ServeEngine.restore(snapshot_dir, journal_path)``."""
+
+    def __init__(self, msg: str, *, tick: int):
+        super().__init__(msg)
+        self.tick = tick
 
 
 @dataclass(frozen=True)
@@ -66,7 +98,9 @@ class FaultEvent:
     the plan never peeks at the engine). ``repeat`` is how many
     consecutive attempts of the same tick's call a step_exception
     fails: 1 (default) is a transient blip one retry absorbs, anything
-    above the engine's ``max_step_retries`` is a persistent outage."""
+    above the engine's ``max_step_retries`` is a persistent outage.
+    ``engine_crash`` events use only ``tick`` — the process dies after
+    that tick completes; ``call``/``slot``/``repeat`` are ignored."""
     tick: int
     kind: str
     call: str = "any"
@@ -95,12 +129,15 @@ class FaultPlan:
 
     @classmethod
     def generate(cls, seed: int, n_ticks: int, rate: float, n_slots: int,
-                 kinds: Tuple[str, ...] = FAULT_KINDS) -> "FaultPlan":
+                 kinds: Tuple[str, ...] = INJECTABLE_KINDS) -> "FaultPlan":
         """Sample a schedule: each tick independently hosts one fault
         with probability ``rate``, uniform over ``kinds``, slots, and
         (for step/logit faults) the two call kinds. Same arguments =>
         identical plan, bit-for-bit — the determinism contract
-        tests/test_fault_tolerance.py pins."""
+        tests/test_fault_tolerance.py pins. Defaults to the three
+        INJECTABLE kinds (never "engine_crash": crashes are scheduled
+        explicitly by restart harnesses, and sampling them here would
+        silently change every existing seeded schedule)."""
         rng = np.random.default_rng(seed)
         events: List[FaultEvent] = []
         for tick in range(n_ticks):
@@ -137,6 +174,12 @@ class FaultPlan:
     def cache_slots(self, tick: int) -> List[int]:
         """Slots whose cache slices to poison at the start of ``tick``."""
         return [e.slot for e in self._at(tick, "cache_corruption")]
+
+    def crash_at(self, tick: int) -> bool:
+        """True if the process should die after completing ``tick``
+        (the engine raises EngineCrash between ticks; a restored
+        engine resumes at tick+1, so the same event never re-fires)."""
+        return bool(self._at(tick, "engine_crash"))
 
 
 def corrupt_logits(logits: np.ndarray, slots: List[int]) -> np.ndarray:

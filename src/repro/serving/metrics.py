@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.obs.histogram import LogHistogram
@@ -108,8 +108,11 @@ class MetricsRecorder:
         self._t0 = time.monotonic()
 
     def stop(self):
+        # accumulate (don't overwrite): a restored engine loads the dead
+        # process's wall total via load_state_dict and adds its own
+        # start/stop segment on top
         if self._t0 is not None:
-            self._wall = time.monotonic() - self._t0
+            self._wall += time.monotonic() - self._t0
             self._t0 = None
 
     # -- events ------------------------------------------------------------
@@ -141,19 +144,25 @@ class MetricsRecorder:
                                       n_decoding, device_calls))
 
     def on_device_call(self, call: str, kind: Optional[str] = None,
-                       replay: bool = False,
+                       replay: bool = False, restore: bool = False,
                        dur_s: Optional[float] = None):
         """``call`` is the engine phase ("decode" | "prefill");
         ``kind`` the compiled step's call_kind tag, suffixed "+replay"
-        when the batch carries a recovering slot. ``dur_s`` (wall
-        seconds around the device call) feeds the per-kind log-bucketed
-        latency histogram."""
+        when the batch carries a recovering slot and "+restore" when it
+        carries a slot re-prefilling after a warm restart (restore wins:
+        restart traffic is the cost snapshot cadence trades against, so
+        it must not hide inside the fault-replay bucket). ``dur_s``
+        (wall seconds around the device call) feeds the per-kind
+        log-bucketed latency histogram."""
         if call == "decode":
             self.decode_calls += 1
         elif call == "prefill":
             self.prefill_calls += 1
         tag = kind or call
-        if replay:
+        if restore:
+            from repro.launch.steps import RESTORE_TAG
+            tag += RESTORE_TAG
+        elif replay:
             from repro.launch.steps import REPLAY_TAG
             tag += REPLAY_TAG
         self.calls_by_kind[tag] = self.calls_by_kind.get(tag, 0) + 1
@@ -167,7 +176,13 @@ class MetricsRecorder:
                   deadline=None):
         """A request refused at submit: recorded, never admitted. The
         row exists so ``n_requests`` still counts every submission and
-        results can report the rejection."""
+        results can report the rejection. If the rid already has a row
+        (a "duplicate_rid" rejection), the ORIGINAL request's row must
+        survive — only the rejection counter moves, or the duplicate
+        would silently erase the live request's metrics."""
+        if rid in self.requests:
+            self.rejected += 1
+            return
         r = RequestMetrics(rid=rid, prompt_len=prompt_len, gen_len=gen_len,
                            arrival=arrival, deadline=deadline)
         r.outcome, r.reason = "rejected", reason
@@ -211,6 +226,66 @@ class MetricsRecorder:
         last tick."""
         self._slot_log = list(intervals)
         self._n_slots = n_slots
+
+    # -- snapshot / restore ------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable full state — everything summary()/
+        per_request() derive from. Saved inside engine snapshots
+        (serving.snapshot) so a warm-restarted engine reports cumulative
+        metrics, not just the post-restart segment. Wall time is saved
+        as the accumulated total; the live ``_t0`` segment (if the
+        recorder is mid-run) is intentionally NOT folded in — a snapshot
+        taken mid-tick must not double-count when the same process later
+        stops cleanly."""
+        return {
+            "requests": [asdict(r)
+                         for r in sorted(self.requests.values(),
+                                         key=lambda r: r.rid)],
+            "ticks": [asdict(t) for t in self.ticks],
+            "decode_calls": self.decode_calls,
+            "prefill_calls": self.prefill_calls,
+            "generated_tokens": self.generated_tokens,
+            "faults": dict(self.faults),
+            "retries": self.retries,
+            "retries_by_kind": dict(self.retries_by_kind),
+            "replays": self.replays,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "straggler_ticks": self.straggler_ticks,
+            "calls_by_kind": dict(self.calls_by_kind),
+            "call_latency": {tag: h.to_dict()
+                             for tag, h in self.call_latency.items()},
+            "slot_log": [[s, a, r] for s, a, r in self._slot_log],
+            "n_slots": self._n_slots,
+            "wall": self._wall,
+        }
+
+    def load_state_dict(self, d: dict):
+        """Inverse of state_dict (JSON round-trip safe: request rows are
+        a list, so rids never go through string keys)."""
+        self.requests = {int(row["rid"]): RequestMetrics(**row)
+                         for row in d["requests"]}
+        self.ticks = [TickMetrics(**row) for row in d["ticks"]]
+        self.decode_calls = int(d["decode_calls"])
+        self.prefill_calls = int(d["prefill_calls"])
+        self.generated_tokens = int(d["generated_tokens"])
+        self.faults = {str(k): int(v) for k, v in d["faults"].items()}
+        self.retries = int(d["retries"])
+        self.retries_by_kind = {str(k): int(v)
+                                for k, v in d["retries_by_kind"].items()}
+        self.replays = int(d["replays"])
+        self.rejected = int(d["rejected"])
+        self.shed = int(d["shed"])
+        self.straggler_ticks = int(d["straggler_ticks"])
+        self.calls_by_kind = {str(k): int(v)
+                              for k, v in d["calls_by_kind"].items()}
+        self.call_latency = {str(tag): LogHistogram.from_dict(h)
+                             for tag, h in d["call_latency"].items()}
+        self._slot_log = [(int(s), int(a), None if r is None else int(r))
+                          for s, a, r in d["slot_log"]]
+        self._n_slots = int(d["n_slots"])
+        self._wall = float(d["wall"])
+        self._t0 = None
 
     # -- summaries ---------------------------------------------------------
     def summary(self) -> dict:

@@ -1,0 +1,370 @@
+"""Engine snapshot / restore: periodic durable state + journal-tail replay.
+
+A snapshot is one atomic checkpoint (checkpoint.checkpoint: tmp dir +
+fsync + ``os.replace`` publish, so a kill mid-snapshot leaves the
+previous good step untouched) holding BOTH halves of engine state:
+
+  * the DEVICE half — the full slot-cache pytree (KV/SSM state +
+    per-slot positions + shared enc_out), saved as the checkpoint tree;
+  * the HOST half — manifest ``extra``: per-slot state machine rows,
+    the admission queue, outputs so far, skip counts, the slot audit
+    log, the full metrics state, and the engine's construction config.
+
+The snapshot also records ``journal_offset`` — the journal's durable
+byte offset at save time — which is the seam the two durability layers
+compose at: everything at or before the offset is already reflected in
+the snapshot; everything after it is the TAIL that restore replays.
+
+Restore (``restore_engine_state``, driven by ``ServeEngine.restore``):
+
+  1. load the latest (or requested) snapshot; device_put the cache back
+     under the engine's serving sharding;
+  2. read the journal tail past ``journal_offset`` and fold it
+     (journal.fold_records): post-snapshot submits extend the queue,
+     admits move requests into slots, tokens extend outputs, done/shed/
+     reject settle terminal states — metrics are re-applied in record
+     order so counters stay cumulative across the crash;
+  3. rebuild each occupied slot as PREFILLING over its durable record
+     ``prompt + all journaled tokens`` with the cursor at the snapshot's
+     cache-token count — the PR 7 replay path. Because chunked prefill
+     is bit-identical to sequential decode (``prefill_exact`` on the SSM
+     parallel path), finishing that re-prefill emits exactly the NEXT
+     token of the stream, bitwise: a killed-and-restored run is
+     indistinguishable from an uninterrupted one, token for token.
+     Slots admitted after the snapshot have no trusted cache and
+     re-prefill from zero (their slices are mask-reset first).
+
+Cadence is the replay-work dial: a slot decodes at most one token per
+tick, so the journal-evidenced work a restore re-enters is bounded by
+(ticks since last snapshot) per slot — ``snapshot_every * n_slots``
+total, the bound the kill-chaos bench guards. The final re-entered
+token of each record is NOT redone work (its argmax yields the next NEW
+token — the uninterrupted engine spends a decode call on the same
+position), which is why ``replayed_prefill_tokens`` counts
+``evidenced - cursor``, not record length.
+
+What is deliberately NOT restored: ``first_logits`` (a debugging
+convenience for guards, meaningful only within one process's run) and
+the per-tick metrics series for ticks between the snapshot and the
+crash (the dead process's memory; counters — tokens, calls, faults —
+stay exact because token counters are re-applied from the journal,
+while the lost ticks' DEVICE-call rows died with the process).
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
+                                         save_checkpoint)
+
+SNAPSHOT_VERSION = 1
+
+#: engine construction knobs stored in (and restored from) the manifest
+ENGINE_KEYS = ("n_slots", "max_len", "prefill_chunk", "prefill_mode",
+               "schedule", "spf_age_cap", "max_ticks", "strict",
+               "queue_cap", "max_step_retries", "max_replays",
+               "snapshot_every", "snapshot_keep")
+
+
+class SnapshotError(RuntimeError):
+    """Snapshot/engine mismatch or a structurally bad snapshot."""
+
+
+def _slot_rows(engine) -> List[dict]:
+    from repro.serving.engine import SlotState
+    rows = []
+    for slot in engine.slots:
+        if slot.state is SlotState.FREE:
+            rows.append({"state": "free"})
+            continue
+        emitted = engine.outputs.get(slot.rid, [])
+        if slot.state is SlotState.DECODING:
+            # cache holds prompt + all emitted tokens EXCEPT the newest
+            # (pending_token): the decode that emits token m consumed
+            # token m-1, writing position P+m-2 — so P+m-1 tokens total
+            cache_tokens = len(slot.durable) + len(emitted) - 1
+        else:
+            cache_tokens = slot.cursor
+        rows.append({
+            "state": slot.state.value, "rid": int(slot.rid),
+            "durable": [int(t) for t in slot.durable],
+            "cursor": int(slot.cursor),
+            "cache_tokens": int(cache_tokens),
+            "gen_len": int(slot.gen_len),
+            "pending_token": int(slot.pending_token),
+            "deadline": (None if slot.deadline is None
+                         else float(slot.deadline)),
+            "fault_count": int(slot.fault_count),
+            "replay": bool(slot.replay),
+        })
+    return rows
+
+
+def save_snapshot(engine) -> str:
+    """Write one atomic engine snapshot at step = completed tick count.
+    Host-side state rides the manifest ``extra``; the cache pytree is
+    the checkpoint tree. Returns the published step directory."""
+    if engine.snapshot_dir is None:
+        raise SnapshotError("engine has no snapshot_dir configured")
+    host_cache = jax.tree_util.tree_map(np.asarray, engine.cache)
+    extra = {
+        "version": SNAPSHOT_VERSION,
+        "tick": int(engine.tick_count),
+        "journal_offset": (engine.journal.offset
+                           if engine.journal is not None else None),
+        "engine": {"arch": engine.cfg.name,
+                   **{k: getattr(engine, k) for k in ENGINE_KEYS}},
+        "slots": _slot_rows(engine),
+        "queue": [{"rid": int(r.rid),
+                   "prompt": [int(t) for t in r.prompt],
+                   "gen_len": int(r.gen_len),
+                   "arrival": float(r.arrival),
+                   "deadline": (None if r.deadline is None
+                                else float(r.deadline))}
+                  for r in engine.queue],
+        "skips": {str(k): int(v) for k, v in engine.skips.items()},
+        "outputs": {str(k): [int(t) for t in v]
+                    for k, v in engine.outputs.items()},
+        "rejected": {str(k): v for k, v in engine.rejected.items()},
+        "duplicate_rids": [int(r) for r in engine.duplicate_rids],
+        "has_deadlines": bool(engine._has_deadlines),
+        "slot_log": [[iv.slot, iv.rid, iv.admit_tick, iv.release_tick]
+                     for iv in engine.slot_log],
+        "metrics": engine.metrics.state_dict(),
+    }
+    return save_checkpoint(engine.snapshot_dir, engine.tick_count,
+                           {"cache": host_cache}, extra=extra,
+                           keep=engine.snapshot_keep)
+
+
+def read_snapshot_meta(snapshot_dir: str,
+                       step: Optional[int] = None) -> Tuple[int, dict]:
+    """Manifest ``extra`` of the latest (or given) snapshot, without
+    touching the cache arrays — ServeEngine.restore reads this first to
+    construct the replacement engine with matching geometry."""
+    if step is None:
+        step = latest_step(snapshot_dir)
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {snapshot_dir}")
+    man = Path(snapshot_dir) / f"step_{step:010d}" / "manifest.json"
+    extra = json.loads(man.read_text())["extra"]
+    if extra.get("version") != SNAPSHOT_VERSION:
+        raise SnapshotError(f"unknown snapshot version "
+                            f"{extra.get('version')!r}")
+    return step, extra
+
+
+def _request_from(d: dict):
+    from repro.serving.workload import Request
+    return Request(rid=int(d["rid"]), prompt=tuple(d["prompt"]),
+                   gen_len=int(d["gen_len"]), arrival=float(d["arrival"]),
+                   deadline=(None if d.get("deadline") is None
+                             else float(d["deadline"])))
+
+
+def restore_engine_state(engine, snapshot_dir: str, step: int, *,
+                         journal_path: Optional[str] = None,
+                         journal_fsync: bool = True) -> dict:
+    """Rebuild ``engine`` (freshly constructed, idle) from snapshot
+    ``step`` plus the journal tail. Returns the restore stats dict (also
+    left on ``engine.restore_stats``). See module docstring for the
+    replay math."""
+    from repro.serving.engine import SlotInterval, SlotState, _Slot
+    from repro.serving.journal import Journal, fold_records, read_journal
+
+    cache_like = jax.tree_util.tree_map(np.asarray, engine.cache)
+    tree, step, extra = load_checkpoint(snapshot_dir, {"cache": cache_like},
+                                        step)
+    eng_meta = extra["engine"]
+    if eng_meta["arch"] != engine.cfg.name:
+        raise SnapshotError(f"snapshot arch {eng_meta['arch']!r} != "
+                            f"engine arch {engine.cfg.name!r}")
+    for k in ("n_slots", "max_len", "prefill_chunk", "prefill_mode"):
+        if eng_meta[k] != getattr(engine, k):
+            raise SnapshotError(
+                f"snapshot {k}={eng_meta[k]!r} != engine "
+                f"{getattr(engine, k)!r} — restore needs identical "
+                f"geometry for the cache layout to be meaningful")
+    engine.cache = jax.device_put(tree["cache"], engine._cache_sharding)
+
+    # -- journal tail (records the snapshot does NOT already reflect) --
+    tail: List[dict] = []
+    if journal_path is not None and Path(journal_path).exists():
+        start = int(extra.get("journal_offset") or 0)
+        tail, _, _ = read_journal(journal_path, start=start)
+    fold = fold_records(tail)
+
+    # -- queue: snapshot queue + tail submits − tail admits/sheds ------
+    queue_reqs = {int(q["rid"]): _request_from(q) for q in extra["queue"]}
+    requests_by_rid = dict(queue_reqs)
+    for rid, rec in fold["submits"].items():
+        req = _request_from(rec)
+        queue_reqs[req.rid] = req
+        requests_by_rid[req.rid] = req
+    for rid in list(queue_reqs):
+        if rid in fold["admitted"] or rid in fold["shed"]:
+            del queue_reqs[rid]
+    engine.queue = deque(sorted(queue_reqs.values(),
+                                key=lambda r: (r.arrival, r.rid)))
+    # skip counts: snapshot values for still-queued rids (spf picks
+    # between snapshot and crash are the dead process's memory — the
+    # cap-bound restarts from the snapshot's counts)
+    engine.skips = {int(k): int(v) for k, v in extra["skips"].items()
+                    if int(k) in queue_reqs}
+    for rid in queue_reqs:
+        engine.skips.setdefault(rid, 0)
+
+    # -- outputs / terminal maps ---------------------------------------
+    outputs = {int(k): [int(t) for t in v]
+               for k, v in extra["outputs"].items()}
+    for rid, toks in fold["tokens"].items():
+        outputs.setdefault(int(rid), []).extend(int(t) for t in toks)
+    for rid in fold["admitted"]:
+        outputs.setdefault(int(rid), [])
+    engine.outputs = outputs
+    engine.rejected = {int(k): str(v)
+                       for k, v in extra["rejected"].items()}
+    engine.duplicate_rids = [int(r) for r in extra["duplicate_rids"]]
+    for rid, rec in fold["rejected"].items():
+        if rec["reason"] == "duplicate_rid":
+            engine.duplicate_rids.append(int(rid))
+        else:
+            engine.rejected[int(rid)] = rec["reason"]
+    engine._has_deadlines = bool(extra["has_deadlines"]) or any(
+        r.get("deadline") is not None for r in fold["submits"].values())
+
+    # -- metrics: snapshot state + tail re-applied in record order -----
+    engine.metrics.load_state_dict(extra["metrics"])
+    m = engine.metrics
+    for rec in tail:
+        kind, rid, tick = rec["kind"], rec.get("rid"), rec["tick"]
+        if kind == "submit":
+            m.on_submit(rid, len(rec["prompt"]), rec["gen_len"],
+                        rec["arrival"], deadline=rec["deadline"])
+        elif kind == "admit":
+            m.on_admit(rid, tick, skips=rec.get("skips", 0))
+        elif kind == "token":
+            if m.requests[rid].first_token_tick is None:
+                m.on_first_token(rid, tick)
+            m.on_token(rid)
+        elif kind == "done":
+            m.on_done(rid, tick)
+        elif kind == "shed":
+            m.on_shed(rid, tick, rec["reason"])
+        elif kind == "reject":
+            m.on_reject(rid, rec["prompt_len"], rec["gen_len"],
+                        rec["arrival"], rec["reason"],
+                        deadline=rec["deadline"])
+
+    # -- slot audit log + live occupancy through the tail --------------
+    engine.slot_log = [SlotInterval(slot=int(s), rid=int(r),
+                                    admit_tick=int(a),
+                                    release_tick=(None if rel is None
+                                                  else int(rel)))
+                       for s, r, a, rel in extra["slot_log"]]
+    engine._open_interval = {iv.slot: iv for iv in engine.slot_log
+                             if iv.release_tick is None}
+    slot_meta = extra["slots"]
+    assign = {s: int(row["rid"]) for s, row in enumerate(slot_meta)
+              if row["state"] != "free"}
+    for rec in tail:
+        if rec["kind"] == "admit":
+            s = int(rec["slot"])
+            assign[s] = int(rec["rid"])
+            iv = SlotInterval(slot=s, rid=int(rec["rid"]),
+                              admit_tick=int(rec["tick"]))
+            engine.slot_log.append(iv)
+            engine._open_interval[s] = iv
+        elif rec["kind"] in ("done", "shed"):
+            rid = rec.get("rid")
+            s = next((s for s, r in assign.items() if r == rid), None)
+            if s is not None:
+                del assign[s]
+                iv = engine._open_interval.pop(s, None)
+                if iv is not None:
+                    # intervals closed by the dead process are not
+                    # re-emitted to the tracer: a same-process tracer
+                    # already has them, and duplicates would overlap
+                    iv.release_tick = int(rec["tick"]) + 1
+
+    # -- reattach the journal BEFORE rebuilding slots (the torn-tail
+    # edge below may need to append) -----------------------------------
+    if journal_path is not None:
+        engine.journal = Journal(journal_path, resume=True,
+                                 fsync=journal_fsync)
+
+    # -- rebuild occupied slots on the PR 7 replay path ----------------
+    reset_mask = np.zeros((engine.n_slots,), bool)
+    replayed = fresh = restored = 0
+    for s in range(engine.n_slots):
+        rid = assign.get(s)
+        if rid is None:
+            engine.slots[s] = _Slot()
+            continue
+        row = slot_meta[s]
+        if row["state"] != "free" and int(row["rid"]) == rid:
+            durable = np.asarray(row["durable"], np.int32)
+            gen_len = int(row["gen_len"])
+            deadline = row["deadline"]
+            fault_count = int(row["fault_count"])
+            cursor = int(row["cache_tokens"])
+        else:                              # admitted after the snapshot:
+            req = requests_by_rid[rid]     # no trusted cache, start over
+            durable = np.asarray(req.prompt, np.int32)
+            gen_len, deadline = req.gen_len, req.deadline
+            fault_count, cursor = 0, 0
+        emitted = outputs.get(rid, [])
+        if len(emitted) >= gen_len:
+            # every token was journaled but the done record was lost in
+            # the torn tail: settle the request instead of re-prefilling
+            end_tick = max(fold["last_tick"], int(extra["tick"]))
+            m.on_done(rid, end_tick)
+            if engine.journal is not None:
+                engine.journal.append("done", end_tick, rid=rid)
+            iv = engine._open_interval.pop(s, None)
+            if iv is not None:
+                iv.release_tick = end_tick + 1
+            engine.slots[s] = _Slot()
+            continue
+        record = (np.concatenate([durable,
+                                  np.asarray(emitted, np.int32)])
+                  if emitted else durable)
+        if cursor == 0:
+            reset_mask[s] = True
+            fresh += len(record)
+        elif emitted:
+            # journal-evidenced progress the dead engine had already
+            # made past the snapshot cache: re-entering it is the redone
+            # work snapshot cadence bounds. The final record token is
+            # excluded — its argmax produces the next NEW token, work
+            # the uninterrupted engine does too.
+            evidenced = len(durable) + len(emitted) - 1
+            replayed += max(0, evidenced - cursor)
+        engine.slots[s] = _Slot(
+            state=SlotState.PREFILLING, rid=rid, prompt=record,
+            durable=durable, cursor=cursor, gen_len=gen_len,
+            deadline=deadline, fault_count=fault_count,
+            replay=bool(emitted), restore=True)
+        restored += 1
+    if reset_mask.any():
+        engine.cache = engine._reset(engine.cache, jnp.asarray(reset_mask))
+
+    engine.tick_count = max(int(extra["tick"]), fold["last_tick"] + 1)
+    stats = {"from_step": int(step),
+             "resume_tick": int(engine.tick_count),
+             "slots_restored": int(restored),
+             "replayed_prefill_tokens": int(replayed),
+             "fresh_prefill_tokens": int(fresh),
+             "journal_tail_records": len(tail)}
+    engine.restore_stats = stats
+    if engine.tracer is not None:
+        engine.tracer.event("restore", engine.tick_count, **stats)
+    return stats

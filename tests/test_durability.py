@@ -1,0 +1,285 @@
+"""Durability lane: write-ahead journal, snapshot/restore, kill-chaos.
+
+Pins the crash-safety contract (serving.journal / serving.snapshot /
+ServeEngine.restore):
+
+  * the journal is prefix-trusted — recovery stops at the FIRST bad
+    frame (torn tail, flipped bit) and resume truncates to it;
+  * journaling + snapshotting are PASSIVE — outputs and device-call
+    count bitwise/count-identical to a bare run;
+  * an engine killed between ticks restores from the latest snapshot +
+    journal tail and resumes every stream BITWISE, with replayed
+    prefill work bounded by the snapshot cadence;
+  * a writer killed MID-snapshot (stray tmp dir) never corrupts the
+    latest published snapshot;
+  * duplicate rids are rejected (recorded, or raised under strict);
+  * EngineStuckError carries the on-disk journal/trace paths.
+
+Fast lane: run alone with ``pytest -m durability``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (EngineCrash, EngineStuckError, FaultPlan,
+                           INJECTABLE_KINDS, Journal, MetricsRecorder,
+                           ServeEngine, WorkloadSpec, fold_records,
+                           make_trace, read_journal)
+from repro.serving.faults import FaultEvent
+from repro.serving.journal import frame
+
+pytestmark = pytest.mark.durability
+
+SPEC = WorkloadSpec(n_requests=4, arrival_rate=0.5, prompt_len=(3, 10),
+                    gen_len=(4, 6), dist="uniform", seed=11)
+ENGINE_KW = dict(n_slots=2, max_len=24, prefill_chunk=4)
+SNAPSHOT_EVERY = 3
+CRASH_TICKS = (5, 9)
+
+
+# --------------------------------------------------- journal unit tests
+
+def _write_journal(path, records):
+    j = Journal(str(path))
+    for r in records:
+        j.append(r["kind"], r["tick"], **{k: v for k, v in r.items()
+                                          if k not in ("kind", "tick")})
+    j.commit()
+    j.close()
+    return j.offset
+
+
+RECS = [
+    {"kind": "submit", "tick": 0, "rid": 1, "prompt": [3, 1, 4],
+     "gen_len": 4, "arrival": 0, "deadline": None},
+    {"kind": "admit", "tick": 1, "rid": 1, "slot": 0, "skips": 0},
+    {"kind": "token", "tick": 2, "rid": 1, "token": 7},
+    {"kind": "token", "tick": 3, "rid": 1, "token": 9},
+    {"kind": "done", "tick": 4, "rid": 1},
+]
+
+
+def test_journal_roundtrip(tmp_path):
+    p = tmp_path / "j.jsonl"
+    end = _write_journal(p, RECS)
+    recs, off, torn = read_journal(str(p))
+    assert recs == RECS
+    assert off == end == p.stat().st_size
+    assert not torn
+
+
+def test_journal_prefix_trust_on_corruption(tmp_path):
+    """A flipped byte mid-file invalidates EVERYTHING after it — a
+    record is only trusted if every record before it is intact."""
+    p = tmp_path / "j.jsonl"
+    _write_journal(p, RECS)
+    raw = p.read_bytes()
+    # corrupt one payload byte inside the second frame
+    second = raw.index(b"\n") + 1 + 12
+    p.write_bytes(raw[:second] + b"#" + raw[second + 1:])
+    recs, off, torn = read_journal(str(p))
+    assert recs == RECS[:1]
+    assert torn
+    assert off == raw.index(b"\n") + 1
+
+
+def test_journal_torn_tail_truncated_on_resume(tmp_path):
+    """A partial final frame (crash mid-write) is dropped; resume
+    truncates to the last good frame and appends after it."""
+    p = tmp_path / "j.jsonl"
+    _write_journal(p, RECS)
+    good = p.stat().st_size
+    with open(p, "ab") as f:                   # torn tail: half a frame
+        f.write(frame({"kind": "token", "tick": 5, "rid": 1,
+                       "token": 2})[:-9])
+    recs, off, torn = read_journal(str(p))
+    assert torn and off == good and recs == RECS
+
+    j = Journal(str(p), resume=True)
+    assert j.records_recovered == len(RECS)
+    assert p.stat().st_size == good            # tail truncated
+    j.append("token", 5, rid=1, token=2)
+    j.commit()
+    j.close()
+    recs, _, torn = read_journal(str(p))
+    assert not torn
+    assert recs[-1] == {"kind": "token", "tick": 5, "rid": 1, "token": 2}
+
+
+def test_fold_records():
+    fold = fold_records(RECS + [
+        {"kind": "admit", "tick": 5, "rid": 2, "slot": 0, "skips": 1},
+        {"kind": "shed", "tick": 6, "rid": 3, "reason": "deadline"},
+    ])
+    assert fold["tokens"] == {1: [7, 9]}
+    assert fold["token_ticks"] == {1: [2, 3]}
+    assert 1 in fold["done"]
+    assert fold["admits"][0]["rid"] == 2       # LAST admit wins the slot
+    assert set(fold["admitted"]) == {1, 2}
+    assert fold["shed"][3]["reason"] == "deadline"
+    assert fold["last_tick"] == 6
+    assert fold_records([])["last_tick"] == -1
+
+
+# ------------------------------------------------- fault-plan coverage
+
+def test_engine_crash_is_valid_but_never_sampled():
+    e = FaultEvent(tick=4, kind="engine_crash")
+    plan = FaultPlan(events=(e,))
+    assert plan.crash_at(4) and not plan.crash_at(3)
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="power_cut")
+    # generate() must NOT sample crashes: existing seeded schedules stay
+    # bit-identical, and crashes are a harness-level choice
+    plan = FaultPlan.generate(seed=0, n_ticks=500, rate=0.9, n_slots=2)
+    assert {ev.kind for ev in plan.events} <= set(INJECTABLE_KINDS)
+
+
+# --------------------------------------------------------- engine lane
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("tinyllama-1.1b", reduced=True).scaled(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(SPEC, cfg.vocab_size)
+    engine = ServeEngine(cfg, params, **ENGINE_KW)
+    ref_out = engine.run(trace)
+    return cfg, params, trace, ref_out, engine
+
+
+def test_journal_and_snapshots_are_passive(served, tmp_path):
+    """journal=None is the default; turning the durability layer ON must
+    not change outputs or the device-call count (host-side only)."""
+    cfg, params, trace, ref_out, ref_engine = served
+    engine = ServeEngine(cfg, params, journal=str(tmp_path / "j.jsonl"),
+                         snapshot_dir=str(tmp_path / "snaps"),
+                         snapshot_every=SNAPSHOT_EVERY, **ENGINE_KW)
+    out = engine.run(trace)
+    assert out == ref_out
+    assert (engine.metrics.summary()["device_calls"]
+            == ref_engine.metrics.summary()["device_calls"])
+    recs, _, torn = read_journal(str(tmp_path / "j.jsonl"))
+    assert not torn
+    fold = fold_records(recs)
+    assert set(fold["done"]) == set(ref_out)
+    assert {rid: t for rid, t in fold["tokens"].items()} == ref_out
+    assert latest_step(str(tmp_path / "snaps")) is not None
+
+
+def test_kill_chaos_restart_is_bitwise(served, tmp_path):
+    """The tentpole guard: killed at two seeded ticks, restored from
+    snapshot + journal tail each time, every stream finishes bitwise
+    identical to the uninterrupted run, and the journal-evidenced
+    re-prefill work stays under snapshot_every x slots_restored."""
+    cfg, params, trace, ref_out, _ = served
+    jpath = str(tmp_path / "j.jsonl")
+    snapdir = str(tmp_path / "snaps")
+    plan = FaultPlan(events=tuple(
+        FaultEvent(tick=t, kind="engine_crash") for t in CRASH_TICKS))
+    engine = ServeEngine(cfg, params, journal=jpath, snapshot_dir=snapdir,
+                         snapshot_every=SNAPSHOT_EVERY, fault_plan=plan,
+                         **ENGINE_KW)
+    crashes, outputs = 0, None
+    try:
+        outputs = engine.run(trace)
+    except EngineCrash as e:
+        crashes, last_tick = 1, e.tick
+    while outputs is None:
+        engine = ServeEngine.restore(cfg, params, snapshot_dir=snapdir,
+                                     journal_path=jpath, fault_plan=plan)
+        st = engine.restore_stats
+        assert engine.tick_count > last_tick   # the crash never re-fires
+        assert st["replayed_prefill_tokens"] \
+            <= SNAPSHOT_EVERY * max(st["slots_restored"], 1)
+        try:
+            outputs = engine.resume()
+        except EngineCrash as e:
+            crashes, last_tick = crashes + 1, e.tick
+    assert crashes == len(CRASH_TICKS)
+    assert outputs == ref_out
+    # the journal now tells the whole story once, torn-free
+    recs, _, torn = read_journal(jpath)
+    assert not torn
+    assert {r: t for r, t in fold_records(recs)["tokens"].items()} == ref_out
+
+
+def test_restore_tolerates_stray_mid_snapshot_tmp_dir(served, tmp_path):
+    """A writer killed MID-snapshot leaves a .tmp-* dir; latest_step must
+    stay at the previous published step, restore must work, and the next
+    save must sweep the carcass."""
+    cfg, params, trace, ref_out, _ = served
+    jpath = str(tmp_path / "j.jsonl")
+    snapdir = tmp_path / "snaps"
+    engine = ServeEngine(cfg, params, journal=jpath, snapshot_dir=str(snapdir),
+                         snapshot_every=SNAPSHOT_EVERY, **ENGINE_KW)
+    engine.run(trace)
+    good = latest_step(str(snapdir))
+    stray = snapdir / ".tmp-99-12345"
+    stray.mkdir()
+    (stray / "leaf00000.npy").write_bytes(b"half-written garbage")
+    assert latest_step(str(snapdir)) == good   # tmp dirs are invisible
+    restored = ServeEngine.restore(cfg, params, snapshot_dir=str(snapdir),
+                                   journal_path=jpath)
+    assert restored.restore_stats["from_step"] == good
+    assert restored.resume() == ref_out        # everything already done
+    restored.save_snapshot()                   # next save sweeps the tmp
+    assert not stray.exists()
+
+
+def test_duplicate_rid_rejected_and_recorded(served, tmp_path):
+    cfg, params, trace, _, _ = served
+    jpath = str(tmp_path / "j.jsonl")
+    engine = ServeEngine(cfg, params, journal=jpath, **ENGINE_KW)
+    engine.submit(trace[0])
+    engine.submit(trace[0])                    # same rid again
+    assert engine.duplicate_rids == [trace[0].rid]
+    assert len(engine.queue) == 1              # the original survives
+    row = engine.metrics.requests[trace[0].rid]
+    assert row.outcome != "rejected"           # first submission intact
+    engine.journal.commit()
+    recs, _, _ = read_journal(jpath)
+    rejects = [r for r in recs if r["kind"] == "reject"]
+    assert rejects and rejects[0]["reason"] == "duplicate_rid"
+    # strict admission escalates to a raise
+    strict = ServeEngine(cfg, params, strict=True, **ENGINE_KW)
+    strict.submit(trace[0])
+    with pytest.raises(ValueError, match="duplicate"):
+        strict.submit(trace[0])
+
+
+def test_stuck_error_carries_artifact_paths(served, tmp_path):
+    from repro.obs import Tracer
+    cfg, params, trace, _, _ = served
+    jpath = str(tmp_path / "j.jsonl")
+    tpath = str(tmp_path / "t.jsonl")
+    engine = ServeEngine(cfg, params, max_ticks=2, journal=jpath,
+                         tracer=Tracer(arch=cfg.name, path=tpath),
+                         **ENGINE_KW)
+    with pytest.raises(EngineStuckError) as ei:
+        engine.run(trace)
+    err = ei.value
+    assert err.journal_path == jpath and os.path.exists(jpath)
+    assert err.trace_path == tpath and os.path.exists(tpath)
+    recs, _, torn = read_journal(jpath)
+    assert recs and not torn                   # committed pre-raise
+
+
+def test_metrics_state_dict_roundtrip(served):
+    """The snapshot serializes metrics via state_dict(): it must be pure
+    JSON and rebuild a recorder whose summary matches exactly."""
+    _, _, _, _, engine = served
+    sd = engine.metrics.state_dict()
+    sd2 = json.loads(json.dumps(sd))           # survives the manifest
+    m = MetricsRecorder()
+    m.load_state_dict(sd2)
+    a, b = m.summary(), engine.metrics.summary()
+    for k, v in b.items():
+        assert a[k] == v, f"summary[{k!r}] drifted: {a[k]} vs {v}"
