@@ -53,7 +53,15 @@ Guards (raise -> CI fails):
      under cfg.prefill_exact where chunk==decode must be exact);
  13. bounded redo — each restore's journal-evidenced re-prefilled
      tokens <= snapshot_every x slots restored (the cadence-vs-
-     replay-work contract).
+     replay-work contract);
+ 14. paged continuous batching is BITWISE — a >= 1000-request long-tail
+     workload (lognormal prompts, zipf generations) through the paged
+     engine generates streams identical to the contiguous engine,
+     preemption-resumes included;
+ 15. >= 1 preemption actually fired and goodput >= 0.9 under pressure;
+ 16. the paged KV pool is strictly smaller than the static cache;
+ 17. page churn causes ZERO recompiles (the table is a per-call
+     operand, not a traced shape).
 
 The chaos run is traced end to end; its span/event/interval stream plus
 the waterfall is dumped to ``TRACE_serve_chaos.jsonl`` (a CI artifact)
@@ -138,6 +146,21 @@ RESTART_SPEC = WorkloadSpec(n_requests=6, arrival_rate=0.5,
                             prompt_len=(3, 18), gen_len=(4, 8),
                             dist="uniform", seed=17)
 RESTART_SNAPSHOT_EVERY = 4
+#: continuous-batching case: a LONG-TAIL workload (lognormal prompts,
+#: zipf generation lengths — most requests tiny, a heavy tail of big
+#: ones) through the PAGED engine with a pool deliberately smaller than
+#: the static worst-case cache. The shape is the argument for paging:
+#: static slots reserve max_len for everyone, the pool reserves for the
+#: traffic actually seen, and pressure spills into preemption instead
+#: of rejection. CB_N_PAGES=9 vs the static 4x8=32 pages keeps the
+#: pool at ~28% of worst case while goodput stays 1.0.
+CB_SPEC = WorkloadSpec(n_requests=1000, arrival_rate=1.0,
+                       prompt_len=(3, 16), gen_len=(3, 8),
+                       dist="lognormal", gen_dist="zipf", seed=29)
+CB_MAX_LEN = 32
+CB_PAGE_SIZE = 4
+CB_N_PAGES = 9
+CB_GOODPUT_MIN = 0.9
 
 
 def _mk_cache(cfg):
@@ -661,10 +684,117 @@ def bench_restart(arch: str = "tinyllama-1.1b",
     }
 
 
+def _cache_bytes(cache, keys) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if str(getattr(path[-1], "key", path[-1])) in keys:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def bench_continuous_batching(arch: str = "tinyllama-1.1b",
+                              n_requests: int = 0) -> dict:
+    """Paged-cache continuous batching (BENCH key ``continuous``): the
+    long-tail CB_SPEC workload (>= 1000 requests by default) through the
+    paged engine with a pool ~3.5x smaller than the static cache, vs the
+    contiguous engine on the SAME trace. Guards:
+
+     14. bitwise paging — the paged run's generated streams are
+         IDENTICAL to the contiguous run's, preemptions included (a
+         preempted stream re-enters via the journaled-replay record and
+         resumes on the chunk==decode invariant);
+     15. pressure is survivable — >= 1 preemption actually happened
+         (else the pool was not small enough to test anything) AND
+         goodput >= CB_GOODPUT_MIN;
+     16. the pool is genuinely smaller — paged KV pool bytes < the
+         contiguous engine's static KV cache bytes;
+     17. zero recompiles — page churn (tables are per-call operands)
+         never retriggers compilation, per the sentinel.
+    """
+    cfg = get_config(arch, reduced=True, dbpim_mode="joint")
+    mesh = make_test_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tables = build_stacked_tables(params, cfg)
+    params = strip_packed_projections(params, cfg)
+    spec = CB_SPEC
+    if n_requests and n_requests != spec.n_requests:
+        from dataclasses import replace
+        spec = replace(spec, n_requests=n_requests)
+    trace = make_trace(spec, cfg.vocab_size)
+
+    def mk(**kw):
+        return ServeEngine(cfg, params, mesh=mesh, n_slots=N_SLOTS,
+                           max_len=CB_MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                           stacked_tables=tables,
+                           queue_cap=spec.n_requests, **kw)
+
+    ref = mk()
+    ref_out = ref.run(trace)
+    ref_s = ref.metrics.summary()
+    eng = mk(paged=True, page_size=CB_PAGE_SIZE, n_pages=CB_N_PAGES)
+    out = eng.run(trace)
+    s = eng.metrics.summary()
+
+    # guard 14: bitwise paging, preemption-resumes included
+    if out != ref_out:
+        bad = [r for r in ref_out if out.get(r) != ref_out[r]]
+        raise RuntimeError(
+            f"{arch}: paged run diverged from contiguous on "
+            f"{len(bad)} streams (first: {bad[:5]}) — paging is not "
+            f"bitwise")
+    # guard 15: the pool was actually under pressure, and survived it
+    if s["n_preemptions"] < 1:
+        raise RuntimeError(
+            f"{arch}: no preemption in {spec.n_requests} requests at "
+            f"n_pages={CB_N_PAGES} — the pool is too big to exercise "
+            f"page pressure")
+    if s["goodput"] < CB_GOODPUT_MIN:
+        raise RuntimeError(f"{arch}: continuous-batching goodput "
+                           f"{s['goodput']:.3f} < {CB_GOODPUT_MIN}")
+    # guard 16: the pool undercuts the static worst-case reservation
+    pool_bytes = _cache_bytes(eng.cache, {"pk", "pv"})
+    static_bytes = _cache_bytes(ref.cache, {"k", "v"})
+    if not pool_bytes or not static_bytes or pool_bytes >= static_bytes:
+        raise RuntimeError(
+            f"{arch}: paged KV pool {pool_bytes}B >= static KV cache "
+            f"{static_bytes}B — paging saved nothing")
+    recompiles = _check_sentinel(eng, f"{arch}/continuous")  # guard 17
+
+    return {
+        "arch": cfg.name, "n_slots": N_SLOTS, "max_len": CB_MAX_LEN,
+        "prefill_chunk": PREFILL_CHUNK,
+        "page_size": CB_PAGE_SIZE, "n_pages": CB_N_PAGES,
+        "workload": {"n_requests": spec.n_requests,
+                     "arrival_rate": spec.arrival_rate,
+                     "prompt_len": spec.prompt_len,
+                     "gen_len": spec.gen_len, "dist": spec.dist,
+                     "gen_dist": spec.gen_dist, "seed": spec.seed},
+        "goodput": s["goodput"], "goodput_min": CB_GOODPUT_MIN,
+        "n_preemptions": s["n_preemptions"],
+        "page_alloc_failures": s["page_alloc_failures"],
+        "pages_used_mean": s["pages_used_mean"],
+        "pages_used_max": s["pages_used_max"],
+        "pages_total": s["pages_total"],
+        "pool_kv_bytes": pool_bytes,
+        "static_kv_bytes": static_bytes,
+        "pool_over_static": pool_bytes / static_bytes,
+        "engine_ticks_paged": s["engine_ticks"],
+        "engine_ticks_contiguous": ref_s["engine_ticks"],
+        "tokens_per_step_paged": s["tokens_per_step"],
+        "tokens_per_step_contiguous": ref_s["tokens_per_step"],
+        "ttft_ticks_mean_paged": s["ttft_ticks_mean"],
+        "ttft_ticks_mean_contiguous": ref_s["ttft_ticks_mean"],
+        "recompile_counts": recompiles,
+        "bitwise_paging": True,
+        "pass": True,
+    }
+
+
 def run(smoke: bool = False, out: str = "BENCH_serve_engine.json",
         trace_out: str = "TRACE_serve_chaos.jsonl",
         restart_trace_out: str = "TRACE_serve_restart.jsonl",
-        restart_journal_out: str = "JOURNAL_serve_restart.jsonl"):
+        restart_journal_out: str = "JOURNAL_serve_restart.jsonl",
+        cb_n_requests: int = 0):
     # smoke covers BOTH archs: mamba2's parallel-prefill traffic contract
     # (guard 4) is a CI guard, not a local-only measurement
     archs = ARCHS
@@ -713,11 +843,19 @@ def run(smoke: bool = False, out: str = "BENCH_serve_engine.json",
             f"(cadence {r['snapshot_every']}) "
             f"bitwise_restart={r['bitwise_restart']} "
             f"durability_passive={r['durability_passive']}"))
+    cb = bench_continuous_batching(n_requests=cb_n_requests)
+    rows.append((
+        "serve_engine.continuous", 0.0,
+        f"n_requests={cb['workload']['n_requests']} "
+        f"goodput={cb['goodput']:.2f} preemptions={cb['n_preemptions']} "
+        f"pool/static={cb['pool_over_static']:.2f} "
+        f"pages_used_max={cb['pages_used_max']}/{cb['pages_total']} "
+        f"bitwise_paging={cb['bitwise_paging']}"))
     emit(rows)
     payload = {"smoke": smoke, "archs": records, "schedule": sched,
-               "chaos": chaos, "restart": restart,
+               "chaos": chaos, "restart": restart, "continuous": cb,
                "pass": all(r["pass"] for r in records.values())
-               and sched["pass"] and chaos["pass"]
+               and sched["pass"] and chaos["pass"] and cb["pass"]
                and all(r["pass"] for r in restart.values())}
     if out:
         with open(out, "w") as f:
@@ -747,8 +885,12 @@ if __name__ == "__main__":
                     default="JOURNAL_serve_restart.jsonl",
                     help="restart-case recovered write-ahead journal "
                          "artifact ('' disables)")
+    ap.add_argument("--n-requests", type=int, default=0,
+                    help="continuous-batching case request count "
+                         "(0 = the spec default, >= 1000)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke, out=args.out, trace_out=args.trace_out,
         restart_trace_out=args.restart_trace_out,
-        restart_journal_out=args.restart_journal_out)
+        restart_journal_out=args.restart_journal_out,
+        cb_n_requests=args.n_requests)

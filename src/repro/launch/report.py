@@ -12,10 +12,12 @@ Sections (each reads one record type of the obs.trace taxonomy):
     (the engine's audit log), busy fraction per slot and overall;
   * QUEUE      — queue-depth-over-time sparkline from the tick spans'
     queue_depth attr;
+  * PAGE POOL  — page-pool occupancy sparkline from the tick spans'
+    pages_used / pages_total attrs (paged engines only);
   * WATERFALL  — per-call-kind weight-traffic attribution by parameter
     path (rows sum to the call's weight_bytes exactly);
-  * FAULTS     — fault / retry / quarantine / replay / shed / reject
-    events grouped by kind, with the tick each fired on.
+  * FAULTS     — fault / retry / quarantine / replay / preempt / shed /
+    reject events grouped by kind, with the tick each fired on.
 
 The trace is validated (obs.trace.validate) before rendering — a trace
 that fails its structural invariants is a bug report, not a report.
@@ -153,6 +155,28 @@ def render(records: List[dict], width: int = 64) -> str:
                      f"max={vmax}  mean={sum(d for _, d in depths) / len(depths):.2f}  "
                      f"(tick 0..{depths[-1][0]})")
 
+    # -- PAGE POOL ---------------------------------------------------------
+    pool = [(t["tick"], t["attrs"].get("pages_used"),
+             t["attrs"].get("pages_total")) for t in ticks
+            if t["attrs"].get("pages_total")]
+    if pool:
+        lines.append("")
+        lines.append("== PAGE POOL ==")
+        total = max(pt for _, _, pt in pool)
+        vals = [float(pu) for _, pu, _ in pool]
+        vmax = max(vals)
+        full_ticks = sum(1 for v in vals if v >= total)
+        mean = sum(vals) / len(vals)
+        if len(vals) > width:
+            per = len(vals) / width
+            vals = [sum(vals[int(i * per):int((i + 1) * per)]) /
+                    max(len(vals[int(i * per):int((i + 1) * per)]), 1)
+                    for i in range(width)]
+        lines.append(f"  [{_spark(vals, total)}]  "
+                     f"pool {total} pages  max_used={vmax:.0f} "
+                     f"mean={mean:.2f}  full {full_ticks}/{len(pool)} "
+                     f"ticks")
+
     # -- WATERFALL ---------------------------------------------------------
     if waterfalls:
         lines.append("")
@@ -170,8 +194,8 @@ def render(records: List[dict], width: int = 64) -> str:
                 lines.append(f"    (!) rows - total residual: {resid}")
 
     # -- FAULTS ------------------------------------------------------------
-    fault_names = ("fault", "retry", "quarantine", "replay", "shed",
-                   "reject")
+    fault_names = ("fault", "retry", "quarantine", "replay", "preempt",
+                   "shed", "reject")
     fevents = [e for e in events if e["name"] in fault_names]
     if fevents:
         lines.append("")

@@ -5,7 +5,14 @@
 
 The engine runs an admission queue over a static batch of ``--batch``
 cache slots (QUEUED -> PREFILLING -> DECODING -> DONE), with chunked
-cache-filling prefill interleaved between decode steps: a new request's
+cache-filling prefill interleaved between decode steps. ``--paged``
+switches the KV cache from per-slot worst-case strips to a shared pool
+of fixed-size pages (``--n-pages`` x ``--page-size`` tokens): slots
+borrow pages as their sequences grow, admission is gated on free pages,
+and under oversubscription the youngest request is preempted (pages
+released, later re-admitted head-of-line and resumed bitwise from its
+journaled record). Decode outputs are bitwise identical to the
+contiguous cache; SSM/conv states stay slot-resident. A new request's
 prompt advances ``--prefill-chunk`` tokens per device call while
 in-flight requests keep emitting a token every tick. All steps are
 fixed-shape and compiled once — no recompilation per request.
@@ -75,7 +82,9 @@ def _spec_from(args) -> WorkloadSpec:
                         arrival_rate=args.arrival_rate,
                         prompt_len=tuple(args.prompt_len),
                         gen_len=(args.gen_len, args.gen_len),
-                        dist=args.dist, seed=args.seed,
+                        dist=args.dist,
+                        gen_dist=getattr(args, "gen_dist", "uniform"),
+                        seed=args.seed,
                         deadline_slack=getattr(args, "deadline_slack",
                                                None))
 
@@ -160,6 +169,9 @@ def build_engine_and_trace(args, cfg):
                                                   2),
                          max_replays=getattr(args, "max_replays", 3),
                          tracer=tracer,
+                         paged=getattr(args, "paged", False),
+                         page_size=getattr(args, "page_size", 16),
+                         n_pages=getattr(args, "n_pages", None),
                          journal=getattr(args, "journal", None),
                          snapshot_dir=getattr(args, "snapshot_dir", None),
                          snapshot_every=getattr(args, "snapshot_every", 0),
@@ -224,7 +236,26 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="Poisson arrivals per engine tick (0 = all at t0)")
     ap.add_argument("--dist", default="uniform",
-                    choices=["uniform", "bimodal", "fixed"])
+                    choices=["uniform", "bimodal", "fixed", "lognormal",
+                             "zipf"],
+                    help="prompt-length distribution; lognormal/zipf give "
+                         "the long-tail mixes that make paged pools win")
+    ap.add_argument("--gen-dist", default="uniform",
+                    choices=["uniform", "bimodal", "fixed", "lognormal",
+                             "zipf"],
+                    help="generation-length distribution over --gen-len")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache + continuous batching: slots "
+                         "borrow fixed-size pages from a shared pool "
+                         "(admission gated on free pages, decode bitwise "
+                         "the contiguous path)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must divide --max-len)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="pool size in pages; < batch * max_len/page_size "
+                         "oversubscribes (page pressure preempts the "
+                         "youngest request, bitwise resume later); "
+                         "default: full static capacity")
     ap.add_argument("--dbpim-mode", default=None,
                     choices=["dense", "value", "bit", "joint"],
                     help="serve through the DB-PIM kernel path (joint = "
@@ -287,6 +318,14 @@ def main(argv=None):
               f"retries {s['retries']}  replays {s['replays']}  "
               f"rejected {s['n_rejected']}  shed {s['n_shed']}  "
               f"straggler_ticks {s['straggler_ticks']}")
+    if engine.paged:
+        pu = (f"{s['pages_used_mean']:.2f}"
+              if s["pages_used_mean"] is not None else "n/a")
+        print(f"[serve] page pool: {engine.n_pages} x "
+              f"{engine.page_size}-token pages  "
+              f"used mean={pu} max={s['pages_used_max']}  "
+              f"preemptions {s['n_preemptions']}  "
+              f"alloc_failures {s['page_alloc_failures']}")
     if s["slot_busy_frac"] is not None:
         print(f"[serve] slot_busy_frac {s['slot_busy_frac']:.2f}  "
               f"per-slot "

@@ -129,7 +129,8 @@ RESTORE_TAG = "+restore"
 
 
 def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
-               stacked_tables=None, int8_weights: bool = False):
+               stacked_tables=None, int8_weights: bool = False,
+               paged: bool = False):
     """One entry point for every fixed-shape serving step. Returns
     (step_fn, shardings_fn); step_fn carries a ``call_kind`` tag that
     runtime.jaxpr_cost.analyze_call_kinds and the serving engine consume
@@ -164,6 +165,17 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
         Recovery-by-replay re-prefills run THIS executable too; the
         engine meters them under "<call_kind>+replay" (REPLAY_TAG).
 
+    paged=True switches "decode"/"prefill_chunk" to the PAGED cache
+    (pooled {"pk","pv"} leaves from models.init_cache(n_pages=...)): the
+    steps take one extra trailing operand ``ptab`` (n_slots, max_pages)
+    int32 — the host allocator's page table — through which every KV
+    gather/scatter resolves in-graph. The table is a fixed-shape
+    per-call operand (never cache-resident), so page churn between ticks
+    costs ZERO recompiles. The "decode" step routes ``active`` into the
+    attention write mask (pooled leaves have no batch dim for
+    merge_slots to select on — inactive slots' writes are dropped at the
+    scatter). "serve" (lock-step, no allocator) stays contiguous.
+
     stacked_tables (sparsity.sparse_linear.SegmentedKernelTables, from
     build_stacked_tables(params, cfg)): per-segment uniform-MAXB
     joint-sparse weight packs riding each segment's layer scan, so every
@@ -179,6 +191,9 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
                          "exclusive serving formats")
     if int8_weights and call_kind != "serve":
         raise ValueError("int8_weights is a 'serve' step format")
+    if paged and call_kind == "serve":
+        raise ValueError("paged cache is a serving-engine format; the "
+                         "lock-step 'serve' step stays contiguous")
 
     if call_kind == "serve":
         def step_fn(params, cache, token):
@@ -196,6 +211,23 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
             tspec = shr.batch_specs({"token": token}, mesh)["token"]
             return pspec, cspec, tspec
 
+    elif call_kind == "decode" and paged:
+        def step_fn(params, cache, token, active, ptab):
+            logits, new_cache = decode_step(params, cache, token, cfg,
+                                            tables=stacked_tables,
+                                            ptab=ptab, write_mask=active)
+            return logits, merge_slots(new_cache, cache, active, cfg)
+        step_fn.call_kind = "decode"
+
+        def shardings(params, cache, token, active, ptab):
+            pspec = _serving_param_specs(params, mesh)
+            cspec = shr.cache_specs(cache, cfg, mesh)
+            bspec = shr.batch_specs({"token": token, "active": active},
+                                    mesh)
+            # page table: tiny int32, replicated — sharding it would
+            # only add a gather before every pool lookup
+            return pspec, cspec, bspec["token"], bspec["active"], P()
+
     elif call_kind == "decode":
         def step_fn(params, cache, token, active):
             logits, new_cache = decode_step(params, cache, token, cfg,
@@ -209,6 +241,24 @@ def build_step(cfg: ModelConfig, mesh: Mesh, call_kind: str, *,
             bspec = shr.batch_specs({"token": token, "active": active},
                                     mesh)
             return pspec, cspec, bspec["token"], bspec["active"]
+
+    elif paged:                            # "prefill_chunk", paged
+        def step_fn(params, cache, tokens, n_valid, ptab):
+            return decode_chunk(params, cache, tokens, n_valid, cfg,
+                                tables=stacked_tables, ptab=ptab)
+        caps = cfg.serving_capabilities()
+        step_fn.call_kind = (
+            "prefill_parallel"
+            if caps.parallel_prefill and not cfg.prefill_exact
+            else "prefill_chunk_exact")
+
+        def shardings(params, cache, tokens, n_valid, ptab):
+            pspec = _serving_param_specs(params, mesh)
+            cspec = shr.cache_specs(cache, cfg, mesh)
+            bspec = shr.batch_specs({"tokens": tokens, "n_valid": n_valid},
+                                    mesh)
+            return (pspec, cspec, bspec["tokens"], bspec["n_valid"],
+                    P())
 
     else:                                  # "prefill_chunk"
         def step_fn(params, cache, tokens, n_valid):

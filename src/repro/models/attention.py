@@ -2,7 +2,9 @@
 cross-attention, and a static-shape KV cache for prefill/decode.
 
 Shapes: x (B, S, D); q (B, S, Hq, hd); k/v (B, S, Hkv, hd).
-Cache: {"k","v"} (B, S_max, Hkv, hd) + integer write index.
+Cache: {"k","v"} (B, S_max, Hkv, hd) + integer write index — or, paged,
+a pooled {"pk","pv"} (n_pages, page_size, Hkv, hd) indexed through a
+per-slot page table (init_paged_cache; serving.paging owns the table).
 """
 
 from __future__ import annotations
@@ -191,6 +193,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
             "pos": jnp.zeros((), jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     n_layers: int):
+    """Paged KV pool for a layer stack: ``{"pk","pv"}`` of shape
+    (n_layers, n_pages, page_size, Hkv, hd). There is no batch dim — a
+    slot's cache is whatever pages its page-table row points at, which
+    is what lets short requests stop reserving max_len worth of HBM.
+    The page table itself is HOST state (serving.paging.PageAllocator)
+    passed into each step as a fixed-shape operand, never cache-resident.
+
+    Sliding-window archs keep the contiguous ring cache: the ring
+    overwrite pattern is already O(window) and pages would only re-add
+    the indirection without saving memory."""
+    if cfg.window:
+        raise ValueError(f"paged KV cache does not support sliding-window "
+                         f"ring caches ({cfg.name}); serve contiguous")
+    dt = dtype_of(cfg)
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"pk": jnp.zeros(shape, dt), "pv": jnp.zeros(shape, dt)}
+
+
+def _paged_view(pool, ptab, n_kv: int, hd: int):
+    """Gather a per-slot contiguous view (B, MP*PS, Hkv, hd) out of the
+    page pool through the page table. Unallocated entries (-1) clamp to
+    page 0 — their columns are beyond every query's position, so the
+    causal mask zeroes them exactly (softmax of -1e30 underflows to
+    0.0f) and the garbage values never reach an output bit."""
+    n_pages = pool.shape[0]
+    gid = jnp.clip(ptab, 0, n_pages - 1)                 # (B, MP)
+    view = pool[gid]                                     # (B, MP, PS, H, hd)
+    B, MP, PS = view.shape[0], view.shape[1], view.shape[2]
+    return view.reshape(B, MP * PS, n_kv, hd)
+
+
 def _per_slot_pos(pos, B: int):
     """Normalize a cache position to per-slot (B,) int32. Serving keeps a
     scalar position for lock-step batches and a vector when slots hold
@@ -201,16 +236,31 @@ def _per_slot_pos(pos, B: int):
 
 
 def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
-                     dense_fn=None):
+                     dense_fn=None, ptab=None, write_mask=None):
     """Single-token decode against one layer's cache slice.
 
     x (B, 1, D); cache_k/v (B, A, Hkv, hd) with A = alloc len; pos = number
     of tokens already in the cache — a scalar (lock-step batch) or a (B,)
     vector (per-slot depths). Returns (out, new_k, new_v).
+
+    PAGED mode (ptab is not None): cache_k/v are instead one layer's
+    page POOL (n_pages, page_size, Hkv, hd) shared by every slot, and
+    ptab (B, max_pages) int32 maps each slot's token positions to pages
+    (-1 = unallocated). The write scatters through the table (negative
+    page ids route to the out-of-range sentinel and are DROPPED —
+    ``write_mask`` lets the serving engine drop inactive slots' writes
+    in-step, since merge_slots cannot select per-slot on a pooled leaf);
+    the read gathers the slot's pages back into a contiguous
+    (B, max_pages * page_size, Hkv, hd) view. When max_pages * page_size
+    equals the contiguous alloc A, the post-gather math is LITERALLY the
+    contiguous computation — same values, same shapes, same reduction
+    order — so paged decode is bitwise-identical to the contiguous path.
     """
+    if ptab is not None and cfg.window:
+        raise ValueError("paged attention does not support sliding-window "
+                         "ring caches; serve contiguous")
     mm = dense_fn or (lambda w, v, name: v @ w)
     B = x.shape[0]
-    A = cache_k.shape[1]
     posv = _per_slot_pos(pos, B)                                   # (B,)
     q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
     k = _split_heads(mm(p["wk"], x, "wk"), cfg.n_kv_heads, cfg.hd)
@@ -222,25 +272,44 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
         cos, sin = rope_frequencies(cfg, posv[:, None])
         q = apply_rope(q, cos, sin, cfg)
         k = apply_rope(k, cos, sin, cfg)
-    slot = jnp.mod(posv, A) if cfg.window else jnp.minimum(posv, A - 1)
-    rows = jnp.arange(B)
-    new_k = cache_k.at[rows, slot].set(k[:, 0])
-    new_v = cache_v.at[rows, slot].set(v[:, 0])
-    kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
-    vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
-    kpos = jnp.arange(A)[None, :]                                  # (1, A)
-    if cfg.window:
-        # ring buffer: all valid once full
-        valid = (kpos <= slot[:, None]) | (posv[:, None] >= A)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if ptab is None:
+        A = cache_k.shape[1]
+        slot = jnp.mod(posv, A) if cfg.window else jnp.minimum(posv, A - 1)
+        rows = jnp.arange(B)
+        new_k = cache_k.at[rows, slot].set(k[:, 0])
+        new_v = cache_v.at[rows, slot].set(v[:, 0])
+        kk = _repeat_kv(new_k, rep)
+        vv = _repeat_kv(new_v, rep)
+        kpos = jnp.arange(A)[None, :]                              # (1, A)
+        if cfg.window:
+            # ring buffer: all valid once full
+            valid = (kpos <= slot[:, None]) | (posv[:, None] >= A)
+        else:
+            valid = kpos <= posv[:, None]
     else:
-        valid = kpos <= posv[:, None]
+        NP, PS = cache_k.shape[0], cache_k.shape[1]
+        A = ptab.shape[1] * PS
+        wpos = jnp.minimum(posv, A - 1)
+        pid = ptab[jnp.arange(B), wpos // PS]                      # (B,)
+        ok = pid >= 0
+        if write_mask is not None:
+            ok &= write_mask
+        pid_w = jnp.where(ok, pid, NP)         # NP = out of range: dropped
+        new_k = cache_k.at[pid_w, wpos % PS].set(k[:, 0], mode="drop")
+        new_v = cache_v.at[pid_w, wpos % PS].set(v[:, 0], mode="drop")
+        kk = _repeat_kv(_paged_view(new_k, ptab, cfg.n_kv_heads, cfg.hd),
+                        rep)
+        vv = _repeat_kv(_paged_view(new_v, ptab, cfg.n_kv_heads, cfg.hd),
+                        rep)
+        valid = jnp.arange(A)[None, :] <= posv[:, None]
     mask = valid[:, None, None, :]                                 # (B,1,1,A)
     out = _sdpa(q, kk, vv, mask, x.dtype)
     return mm(p["wo"], out.reshape(B, 1, cfg.q_dim), "wo"), new_k, new_v
 
 
 def prefill_attention(p, x, cache_k, cache_v, pos, n_valid,
-                      cfg: ModelConfig, dense_fn=None):
+                      cfg: ModelConfig, dense_fn=None, ptab=None):
     """Chunked cache-filling attention: C prompt tokens in one step.
 
     x (B, C, D); cache_k/v (B, A, Hkv, hd); pos (B,) tokens already in the
@@ -254,13 +323,20 @@ def prefill_attention(p, x, cache_k, cache_v, pos, n_valid,
 
     Requires cfg.window == 0: a sliding-window ring buffer overwrites
     slots within the chunk, which only a sequential walk reproduces.
+
+    PAGED mode (ptab is not None): cache_k/v are the page pool
+    (n_pages, page_size, Hkv, hd); writes scatter through the table
+    (invalid chunk columns and unallocated pages route to the sentinel
+    row and drop — the same mode="drop" idiom as the contiguous path),
+    reads gather the per-slot contiguous view. Bitwise-identical to the
+    contiguous chunk when max_pages * page_size == A.
     """
     if cfg.window:
         raise ValueError("chunked prefill does not support sliding-window "
                          "ring caches; use stepwise (full-forward) prefill")
     mm = dense_fn or (lambda w, v, name: v @ w)
     B, C, _ = x.shape
-    A = cache_k.shape[1]
+    A = cache_k.shape[1] if ptab is None else ptab.shape[1] * cache_k.shape[1]
     posv = _per_slot_pos(pos, B)                                   # (B,)
     qpos = posv[:, None] + jnp.arange(C)[None, :]                  # (B, C)
     q = _split_heads(mm(p["wq"], x, "wq"), cfg.n_heads, cfg.hd)
@@ -276,12 +352,24 @@ def prefill_attention(p, x, cache_k, cache_v, pos, n_valid,
     # scatter the valid chunk tokens into the cache; invalid columns get
     # row index A (out of range) and are dropped by the scatter
     tok_valid = jnp.arange(C)[None, :] < n_valid[:, None]          # (B, C)
-    write_rows = jnp.where(tok_valid, jnp.minimum(qpos, A - 1), A)
-    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
-    new_k = cache_k.at[b_idx, write_rows].set(k, mode="drop")
-    new_v = cache_v.at[b_idx, write_rows].set(v, mode="drop")
-    kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
-    vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
+    if ptab is None:
+        write_rows = jnp.where(tok_valid, jnp.minimum(qpos, A - 1), A)
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+        new_k = cache_k.at[b_idx, write_rows].set(k, mode="drop")
+        new_v = cache_v.at[b_idx, write_rows].set(v, mode="drop")
+        kk = _repeat_kv(new_k, cfg.n_heads // cfg.n_kv_heads)
+        vv = _repeat_kv(new_v, cfg.n_heads // cfg.n_kv_heads)
+    else:
+        NP, PS = cache_k.shape[0], cache_k.shape[1]
+        wpos = jnp.minimum(qpos, A - 1)                            # (B, C)
+        pid = jnp.take_along_axis(ptab, wpos // PS, axis=1)        # (B, C)
+        pid_w = jnp.where(tok_valid & (pid >= 0), pid, NP)
+        new_k = cache_k.at[pid_w, wpos % PS].set(k, mode="drop")
+        new_v = cache_v.at[pid_w, wpos % PS].set(v, mode="drop")
+        kk = _repeat_kv(_paged_view(new_k, ptab, cfg.n_kv_heads, cfg.hd),
+                        cfg.n_heads // cfg.n_kv_heads)
+        vv = _repeat_kv(_paged_view(new_v, ptab, cfg.n_kv_heads, cfg.hd),
+                        cfg.n_heads // cfg.n_kv_heads)
     kpos = jnp.arange(A)[None, None, :]                            # (1,1,A)
     mask = kpos <= qpos[:, :, None]                                # (B,C,A)
     out = _sdpa(q, kk, vv, mask[:, None], x.dtype)

@@ -31,16 +31,33 @@ from .transformer import _block_tail, _sinusoidal, encode, segment_tables
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               enc_out: Optional[jnp.ndarray] = None) -> Dict:
+               enc_out: Optional[jnp.ndarray] = None, *,
+               n_pages: Optional[int] = None,
+               page_size: Optional[int] = None) -> Dict:
     """Per-segment caches: attention segments hold stacked (L_seg, B, A,
     Hkv, hd) k/v, SSM segments stacked (L_seg, B, ...) conv/state — the
     batch axis is 1 EVERYWHERE (the old hybrid layout nested SSM slices
     as (periods, P-1, B, ...), which forced family-switched axis math in
     merge_slots). Single-segment stacks keep the historical "attn"/"ssm"
-    cache keys; hybrid stacks key by segment name."""
+    cache keys; hybrid stacks key by segment name.
+
+    PAGED mode (n_pages + page_size set): attention segments hold a
+    pooled {"pk","pv"} (L_seg, n_pages, page_size, Hkv, hd) instead —
+    every attention segment indexes the SAME page-id space through the
+    per-slot page table the serving engine passes into each step. SSM
+    conv/state are O(1) per slot and stay slot-resident unchanged; so
+    does "pos"."""
+    paged = n_pages is not None
+    if paged and page_size is None:
+        raise ValueError("paged init_cache needs both n_pages and "
+                         "page_size")
     cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
     for seg in decoder_layout(cfg):
         if seg.mixer == "attn":
+            if paged:
+                cache[seg.cache] = attn_mod.init_paged_cache(
+                    cfg, n_pages, page_size, seg.length)
+                continue
             c = attn_mod.init_cache(cfg, batch, max_len, seg.length)
             if seg.cache != "attn":
                 # multi-segment stacks track one global position only
@@ -70,7 +87,8 @@ def _sinusoidal_at(positions, d: int):
 # Decode step
 # ---------------------------------------------------------------------------
 
-def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
+def decode_step(params, cache, token, cfg: ModelConfig, tables=None,
+                ptab=None, write_mask=None):
     """token (B, 1) int32 -> (logits (B, 1, V), new cache).
 
     tables: sparsity.sparse_linear.SegmentedKernelTables — per-segment
@@ -80,6 +98,14 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
     (MoE: grouped expert packs dispatch one kernel call per expert
     slice; enc-dec: cross-attention packs next to self-attention; hybrid
     segments pack independently). None keeps the plain matmuls.
+
+    ptab (B, max_pages) int32 + write_mask (B,) bool switch attention
+    segments to the PAGED cache (pooled {"pk","pv"} leaves): KV writes
+    route through the page table and inactive slots' writes are dropped
+    in-step (merge_slots cannot per-slot-select a pooled leaf — the
+    write_mask replaces it for pools, while SSM/"pos" leaves still merge
+    the old way). The table rides every segment's scan as a broadcast
+    operand: one global page-id space across segments.
     """
     segs = decoder_layout(cfg)
     seg_tables = segment_tables(tables, segs, cfg)
@@ -99,17 +125,24 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
               st.dense_fn(slices) if st is not None else None)
         c = cache[seg.cache]
         if seg.mixer == "attn":
-            def step(h, inp, seg=seg, mk=mk):
+            paged = "pk" in c
+            if paged and ptab is None:
+                raise ValueError("paged cache requires a page table "
+                                 "(ptab) operand")
+            def step(h, inp, seg=seg, mk=mk, paged=paged):
                 p, ck, cv, slices = inp
                 mm = mk(slices)
                 hn = apply_norm(p["norm1"], h, cfg)
                 y, ck, cv = attn_mod.decode_attention(
-                    p["attn"], hn, ck, cv, pos, cfg, dense_fn=mm)
+                    p["attn"], hn, ck, cv, pos, cfg, dense_fn=mm,
+                    ptab=ptab if paged else None,
+                    write_mask=write_mask if paged else None)
                 h = _block_tail(seg, p, h + y, cfg, mm, enc_out)
                 return h, (ck, cv)
+            kk, vk = ("pk", "pv") if paged else ("k", "v")
             x, (cks, cvs) = jax.lax.scan(
-                step, x, (params[seg.name], c["k"], c["v"], txs))
-            nc = {"k": cks, "v": cvs}
+                step, x, (params[seg.name], c[kk], c[vk], txs))
+            nc = {kk: cks, vk: cvs}
             if "pos" in c:
                 nc["pos"] = pos + 1
             new_cache[seg.cache] = nc
@@ -132,8 +165,14 @@ def decode_step(params, cache, token, cfg: ModelConfig, tables=None):
 
 
 def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
-                 tables=None):
+                 tables=None, ptab=None):
     """Chunked cache-filling prefill: C prompt tokens per slot, one step.
+
+    ptab (B, max_pages) int32 switches attention segments to the PAGED
+    cache ({"pk","pv"} pool leaves) — chunk writes scatter through the
+    page table with the same drop-sentinel idiom as the contiguous path
+    (idle slots' n_valid = 0 already gates their writes, so no separate
+    write mask is needed here).
 
     tokens (B, C) int32; n_valid (B,) int32 in [0, C] — the number of real
     prompt tokens per slot this chunk (ragged tail chunks and idle slots
@@ -193,18 +232,24 @@ def decode_chunk(params, cache, tokens, n_valid, cfg: ModelConfig,
               st.dense_fn(slices) if st is not None else None)
         c = cache[seg.cache]
         if seg.mixer == "attn":
-            def step(h, inp, seg=seg, mk=mk):
+            paged = "pk" in c
+            if paged and ptab is None:
+                raise ValueError("paged cache requires a page table "
+                                 "(ptab) operand")
+            def step(h, inp, seg=seg, mk=mk, paged=paged):
                 p, ck, cv, slices = inp
                 mm = mk(slices)
                 hn = apply_norm(p["norm1"], h, cfg)
                 y, ck, cv = attn_mod.prefill_attention(
-                    p["attn"], hn, ck, cv, pos, n_valid, cfg, dense_fn=mm)
+                    p["attn"], hn, ck, cv, pos, n_valid, cfg, dense_fn=mm,
+                    ptab=ptab if paged else None)
                 h = _block_tail(seg, p, h + y, cfg, mm, enc_out,
                                 per_position=True)
                 return h, (ck, cv)
+            kk, vk = ("pk", "pv") if paged else ("k", "v")
             x, (cks, cvs) = jax.lax.scan(
-                step, x, (params[seg.name], c["k"], c["v"], txs))
-            nc = {"k": cks, "v": cvs}
+                step, x, (params[seg.name], c[kk], c[vk], txs))
+            nc = {kk: cks, vk: cvs}
             if "pos" in c:
                 nc["pos"] = pos + n_valid
             new_cache[seg.cache] = nc
@@ -253,7 +298,13 @@ def merge_slots(new_cache, old_cache, keep_mask, cfg: ModelConfig):
     The walk is layout-generic: every cache leaf carries the batch on
     axis 1 ((L_seg, B, ...) for k/v, conv, and state alike — the
     segmented layout), "pos" leaves select per-slot scalars, "enc_out"
-    passes through. No family switches."""
+    passes through. No family switches.
+
+    Paged pool leaves ("pk"/"pv": (L_seg, n_pages, page_size, Hkv, hd))
+    have NO batch axis to select on — they pass through updated. Their
+    per-slot write gating happened IN-STEP (decode_attention's
+    write_mask / prefill's n_valid sentinel-drop), so an inactive slot's
+    pages were never touched in the first place."""
     B = keep_mask.shape[0]
 
     def sel_pos(new, old):
@@ -264,28 +315,49 @@ def merge_slots(new_cache, old_cache, keep_mask, cfg: ModelConfig):
         key = str(getattr(path[-1], "key", path[-1]))
         if key == "pos":
             return sel_pos(new, old)
-        if key == "enc_out":
+        if key in ("enc_out", "pk", "pv"):
             return new
         return _select_batch(keep_mask, new, old, axis=1)
 
     return jax.tree_util.tree_map_with_path(visit, new_cache, old_cache)
 
 
-def reset_slots(cache, slot_mask, cfg: ModelConfig):
+def reset_slots(cache, slot_mask, cfg: ModelConfig, ptab=None):
     """Zero the KV/SSM cache slices and position of the slots where
     slot_mask (B,) is True — the admission step before a freed slot takes
     a new request. Without this, a refilled slot's attention would still
     mask correctly (pos restarts at 0) but SSM states and ring buffers
     carry the PREVIOUS request's activations into the new one. Encoder
     output (enc-dec) is shared and not per-request; callers that rotate
-    enc-dec requests must swap it themselves."""
+    enc-dec requests must swap it themselves.
+
+    Paged caches additionally take ``ptab`` (B, max_pages): the reset is
+    PAGE-TABLE SURGERY — only the pages the masked slots' table rows
+    point at are zeroed (fixed-shape scatter; -1 rows route to the drop
+    sentinel), so admitting one request never touches another slot's
+    pages. SSM/"pos" leaves are per-slot and reset the contiguous way."""
     zeroed = {}
     for key, val in cache.items():
         if key == "enc_out":
             zeroed[key] = val
         else:
             zeroed[key] = jax.tree_util.tree_map(jnp.zeros_like, val)
-    return merge_slots(cache, zeroed, ~slot_mask, cfg)
+    out = merge_slots(cache, zeroed, ~slot_mask, cfg)
+    if ptab is None:
+        return out
+
+    sel = slot_mask[:, None] & (ptab >= 0)                   # (B, MP)
+
+    def visit(path, leaf):
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key not in ("pk", "pv"):
+            return leaf
+        np_ = leaf.shape[1]
+        pids = jnp.where(sel, ptab, np_).reshape(-1)         # (B*MP,)
+        return leaf.at[:, pids].set(jnp.zeros((), leaf.dtype),
+                                    mode="drop")
+
+    return jax.tree_util.tree_map_with_path(visit, out)
 
 
 def prefill(params, tokens, cfg: ModelConfig,

@@ -38,32 +38,43 @@ def table_const_weights(tables) -> Optional[Dict[str, object]]:
 
 def serving_cost_by_kind(cfg, mesh, params, cache, *, n_slots: int,
                          prefill_chunk: int, tables=None,
-                         include_exact_fallback: bool = False
+                         include_exact_fallback: bool = False,
+                         paged: bool = False, max_pages: int = 0
                          ) -> Dict[str, Dict]:
     """Full jaxpr_cost accounting (weight_bytes + weight_bytes_by_path +
     flops/bytes) for one device call of every serving call kind ``cfg``
     supports, keyed by the step builders' call_kind tags.
 
     include_exact_fallback: for parallel-SSD archs, also analyze the
-    exact-chunk step the parallel form is benchmarked against."""
+    exact-chunk step the parallel form is benchmarked against.
+    paged/max_pages: analyze the page-table step variants (``cache`` must
+    then be a pooled paged cache) — the extra ptab operand rides along."""
     import jax.numpy as jnp
 
-    decode_fn, _ = build_step(cfg, mesh, "decode", stacked_tables=tables)
+    extra = ()
+    if paged:
+        extra = (jnp.full((n_slots, max_pages), -1, jnp.int32),)
+    decode_fn, _ = build_step(cfg, mesh, "decode", stacked_tables=tables,
+                              paged=paged)
     tok1 = jnp.zeros((n_slots, 1), jnp.int32)
     act = jnp.ones((n_slots,), bool)
-    calls = {decode_fn.call_kind: (decode_fn, (params, cache, tok1, act))}
+    calls = {decode_fn.call_kind:
+             (decode_fn, (params, cache, tok1, act) + extra)}
     caps = cfg.serving_capabilities()
     if caps.chunked_prefill:
         tokc = jnp.zeros((n_slots, prefill_chunk), jnp.int32)
         nv = jnp.full((n_slots,), prefill_chunk, jnp.int32)
         chunk_fn, _ = build_step(cfg, mesh, "prefill_chunk",
-                                 stacked_tables=tables)
-        calls[chunk_fn.call_kind] = (chunk_fn, (params, cache, tokc, nv))
+                                 stacked_tables=tables, paged=paged)
+        calls[chunk_fn.call_kind] = (chunk_fn,
+                                     (params, cache, tokc, nv) + extra)
         if include_exact_fallback and caps.parallel_prefill \
                 and not cfg.prefill_exact:
             exact_fn, _ = build_step(cfg.scaled(prefill_exact=True), mesh,
-                                     "prefill_chunk", stacked_tables=tables)
-            calls[exact_fn.call_kind] = (exact_fn, (params, cache, tokc, nv))
+                                     "prefill_chunk", stacked_tables=tables,
+                                     paged=paged)
+            calls[exact_fn.call_kind] = (exact_fn,
+                                         (params, cache, tokc, nv) + extra)
     return analyze_call_kinds(calls,
                               const_weights=table_const_weights(tables))
 
@@ -75,7 +86,8 @@ def engine_waterfall(engine) -> Dict[str, Dict[str, object]]:
     costs = serving_cost_by_kind(
         engine.cfg, engine.mesh, engine.params, engine.cache,
         n_slots=engine.n_slots, prefill_chunk=engine.prefill_chunk,
-        tables=engine.stacked_tables)
+        tables=engine.stacked_tables, paged=engine.paged,
+        max_pages=getattr(engine, "max_pages_per_slot", 0))
     return {kind: {"total": float(acc["weight_bytes"]),
                    "rows": dict(acc["weight_bytes_by_path"])}
             for kind, acc in costs.items()}

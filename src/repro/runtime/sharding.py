@@ -250,6 +250,17 @@ def cache_specs(cache_tree, cfg, mesh: Mesh):
             # production fix is KV replication to the TP degree or a
             # shard_map decode kernel (EXPERIMENTS.md §Perf iter 4).
             return P(*spec)
+        if pathstr.endswith("/pk") or pathstr.endswith("/pv"):
+            # paged KV pool (L, n_pages, page_size, Hkv, hd): no batch
+            # dim to DP-shard (pages are the unit of occupancy, owned by
+            # whichever slot the host table says); kv-heads shard over
+            # `model` exactly like the contiguous cache, everything else
+            # replicates — the page-id gather must stay local
+            L, NP_, PS_, H, hd = shape
+            spec = [None, None, None, None, None]
+            if H % mesh.shape.get("model", 1) == 0:
+                spec[3] = "model"
+            return P(*spec)
         if "ssm/state" in pathstr or pathstr.endswith("state"):
             B_idx = leaf.ndim - 4
             spec = [None] * leaf.ndim

@@ -8,6 +8,7 @@ from .faults import (FAULT_KINDS, INJECTABLE_KINDS,  # noqa: F401
 from .journal import (Journal, JournalError, fold_records,  # noqa: F401
                       read_journal)
 from .metrics import MetricsRecorder  # noqa: F401
+from .paging import PageAllocError, PageAllocator  # noqa: F401
 from .prefill import PREFILL_MODES, assemble_chunk  # noqa: F401
 from .snapshot import (SnapshotError, read_snapshot_meta,  # noqa: F401
                        save_snapshot)

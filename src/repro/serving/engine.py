@@ -154,6 +154,7 @@ from repro.runtime.fault import StragglerMonitor
 from repro.serving.faults import EngineCrash, FaultPlan, corrupt_cache
 from repro.serving.journal import Journal
 from repro.serving.metrics import MetricsRecorder
+from repro.serving.paging import PageAllocator
 from repro.serving.prefill import (PREFILL_MODES, assemble_chunk,
                                    build_chunk_step)
 from repro.serving.workload import Request
@@ -181,6 +182,23 @@ class _Slot:
     #                                      (suppress first-token metrics)
     restore: bool = False                # prefilling a warm-restart record
     #                                      (meter calls under "+restore")
+    admit_seq: int = -1                  # monotonic admission order —
+    #                                      page-pressure preemption picks
+    #                                      the YOUNGEST victim by this
+
+
+@dataclass
+class _Preempted:
+    """A request evicted from its slot under page pressure, waiting to
+    re-enter. Its emitted tokens stay in ``engine.outputs`` — on
+    re-admission the replay record is ``durable + outputs[rid]``, so the
+    resumed stream continues BITWISE (the same chunk == decode invariant
+    fault recovery and warm restart lean on)."""
+    rid: int
+    durable: np.ndarray
+    gen_len: int
+    deadline: Optional[float]
+    fault_count: int
 
 
 @dataclass
@@ -236,7 +254,9 @@ class ServeEngine:
                  tracer: Optional[Tracer] = None,
                  recompile_sentinel: bool = True,
                  journal=None, snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 0, snapshot_keep: int = 2):
+                 snapshot_every: int = 0, snapshot_keep: int = 2,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
                              f"{PREFILL_MODES}")
@@ -253,6 +273,33 @@ class ServeEngine:
         self.mesh = mesh or make_test_mesh()
         self.n_slots = n_slots
         self.max_len = max_len
+        # -- paged cache (continuous batching) ---------------------------
+        # n_pages defaults to full static capacity (no oversubscription);
+        # the interesting regime is n_pages < n_slots * max_len/page_size,
+        # where admitted concurrency exceeds what worst-case contiguous
+        # slots could back and page pressure drives preemption.
+        self.paged = bool(paged)
+        if self.paged:
+            if max_len % page_size != 0:
+                raise ValueError(
+                    f"paged engine needs max_len % page_size == 0 "
+                    f"(got {max_len} % {page_size}) — equality "
+                    f"max_pages_per_slot * page_size == max_len is what "
+                    f"makes paged decode bitwise the contiguous path")
+            self.page_size = int(page_size)
+            self.max_pages_per_slot = max_len // page_size
+            self.n_pages = (int(n_pages) if n_pages is not None
+                            else n_slots * self.max_pages_per_slot)
+            self.page_alloc: Optional[PageAllocator] = PageAllocator(
+                self.n_pages, n_slots, self.max_pages_per_slot,
+                self.page_size)
+        else:
+            self.page_size = self.max_pages_per_slot = self.n_pages = 0
+            self.page_alloc = None
+        self._ptab_cached = None
+        self._ptab_version = -1
+        self.preempted: deque = deque()   # _Preempted, FIFO re-admission
+        self._admit_seq = 0
         self.prefill_chunk = prefill_chunk
         self.prefill_mode = prefill_mode
         self.schedule = schedule
@@ -281,7 +328,10 @@ class ServeEngine:
         self.params = params
         self.stacked_tables = stacked_tables
         with self.mesh:
-            cache = init_cache(cfg, n_slots, max_len, enc_out=enc_out)
+            cache = init_cache(
+                cfg, n_slots, max_len, enc_out=enc_out,
+                n_pages=self.n_pages if self.paged else None,
+                page_size=self.page_size if self.paged else None)
             # per-slot positions from the start (merge_slots vectorizes
             # them anyway; starting scalar would recompile after tick 0)
             cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
@@ -290,10 +340,18 @@ class ServeEngine:
             self.cache = cache
 
             decode_fn, shard_fn = build_step(
-                cfg, self.mesh, "decode", stacked_tables=stacked_tables)
+                cfg, self.mesh, "decode", stacked_tables=stacked_tables,
+                paged=self.paged)
             tok0 = jnp.zeros((n_slots, 1), jnp.int32)
             act0 = jnp.zeros((n_slots,), bool)
-            pspec, cspec, tspec, aspec = shard_fn(params, cache, tok0, act0)
+            if self.paged:
+                pt0 = jnp.full((n_slots, self.max_pages_per_slot), -1,
+                               jnp.int32)
+                pspec, cspec, tspec, aspec, ptspec = shard_fn(
+                    params, cache, tok0, act0, pt0)
+            else:
+                pspec, cspec, tspec, aspec = shard_fn(params, cache, tok0,
+                                                      act0)
             # COMMIT the fresh cache to its serving sharding up front:
             # otherwise the first jitted call returns committed outputs
             # whose signature differs from the uncommitted init arrays,
@@ -309,23 +367,33 @@ class ServeEngine:
             # k/v back replicated, and every consumer (reset, prefill)
             # compiles a second steady-state variant at tick 1 — the
             # recompile sentinel caught this
+            dec_in = (shr.named(pspec, self.mesh),
+                      shr.named(cspec, self.mesh),
+                      shr.named(tspec, self.mesh),
+                      shr.named(aspec, self.mesh))
+            if self.paged:
+                dec_in = dec_in + (shr.named(ptspec, self.mesh),)
             self._decode = jax.jit(
                 decode_fn,
-                in_shardings=(shr.named(pspec, self.mesh),
-                              shr.named(cspec, self.mesh),
-                              shr.named(tspec, self.mesh),
-                              shr.named(aspec, self.mesh)),
+                in_shardings=dec_in,
                 out_shardings=(None, shr.named(cspec, self.mesh)),
                 donate_argnums=(1,))
             self._prefill = None
             if prefill_mode == "chunked":
                 self._prefill = build_chunk_step(
                     cfg, self.mesh, params, cache, n_slots, prefill_chunk,
-                    stacked_tables=stacked_tables)
-            self._reset = jax.jit(
-                lambda c, m: reset_slots(c, m, cfg),
-                out_shardings=shr.named(cspec, self.mesh),
-                donate_argnums=(0,))
+                    stacked_tables=stacked_tables, paged=self.paged,
+                    max_pages=self.max_pages_per_slot)
+            if self.paged:
+                self._reset = jax.jit(
+                    lambda c, m, pt: reset_slots(c, m, cfg, ptab=pt),
+                    out_shardings=shr.named(cspec, self.mesh),
+                    donate_argnums=(0,))
+            else:
+                self._reset = jax.jit(
+                    lambda c, m: reset_slots(c, m, cfg),
+                    out_shardings=shr.named(cspec, self.mesh),
+                    donate_argnums=(0,))
 
         # which chunk math this engine's prefill executable compiles to
         # ("prefill_parallel" / "prefill_chunk_exact"; None in "full" mode
@@ -385,11 +453,25 @@ class ServeEngine:
                     f"submitted)")
             return self._reject(request, "duplicate_rid")
         total = request.prompt_len + request.gen_len
-        if total > self.max_len:
+        # capacity is PAGED capacity when paged: a slot can back at most
+        # max_pages_per_slot * page_size tokens, and no request may need
+        # more pages than the whole pool holds (otherwise admission
+        # could never satisfy it and page-pressure preemption would
+        # livelock trying)
+        if self.paged:
+            cap = self.max_pages_per_slot * self.page_size
+            oversized = (total > cap or
+                         self.page_alloc.pages_for(total) > self.n_pages)
+        else:
+            cap = self.max_len
+            oversized = total > cap
+        if oversized:
             if self.strict:
                 raise ValueError(
                     f"request {request.rid}: prompt {request.prompt_len} + "
-                    f"gen {request.gen_len} exceeds max_len {self.max_len}")
+                    f"gen {request.gen_len} exceeds capacity {cap}"
+                    + (f" (page pool {self.n_pages} pages)"
+                       if self.paged else ""))
             return self._reject(request, "oversized")
         if self.queue_cap is not None and len(self.queue) >= self.queue_cap:
             return self._reject(request, "queue_full")
@@ -454,8 +536,8 @@ class ServeEngine:
 
     def _serve_loop(self):
         self.metrics.start()
-        while self.queue or any(s.state is not SlotState.FREE
-                                for s in self.slots):
+        while self.queue or self.preempted or \
+                any(s.state is not SlotState.FREE for s in self.slots):
             self.tick()
             if self.fault_plan is not None and \
                     self.fault_plan.crash_at(self.tick_count - 1):
@@ -552,6 +634,11 @@ class ServeEngine:
                "schedule", "spf_age_cap", "max_ticks", "strict",
                "queue_cap", "max_step_retries", "max_replays",
                "snapshot_every", "snapshot_keep")}
+        # paged keys arrived with snapshot v2; .get keeps v1 restorable
+        kw["paged"] = extra["engine"].get("paged", False)
+        if kw["paged"]:
+            kw["page_size"] = extra["engine"]["page_size"]
+            kw["n_pages"] = extra["engine"]["n_pages"]
         kw.update(overrides)
         engine = cls(cfg, params, mesh=mesh, stacked_tables=stacked_tables,
                      enc_out=enc_out, fault_plan=fault_plan, tracer=tracer,
@@ -575,17 +662,33 @@ class ServeEngine:
         if self._has_deadlines:
             self._shed_hopeless_slots(tick)
         self._admit(tick)
+        if self.paged:
+            # every occupied slot must own the pages this tick's writes
+            # land in BEFORE the device calls go out; pressure resolves
+            # by preempting the youngest-admitted slot
+            self._page_growth(tick)
+            self.page_alloc.check()
         if self.prefill_mode == "chunked":
             calls += self._prefill_phase(tick)
         calls += self._decode_phase(tick)
         qd = len(self.queue)
         n_pre = sum(s.state is SlotState.PREFILLING for s in self.slots)
         n_dec = sum(s.state is SlotState.DECODING for s in self.slots)
+        pages_used = pages_total = None
+        if self.paged:
+            pages_used = self.page_alloc.used_pages
+            pages_total = self.n_pages
         self.metrics.on_tick(tick, queue_depth=qd, n_prefilling=n_pre,
-                             n_decoding=n_dec, device_calls=calls)
+                             n_decoding=n_dec, device_calls=calls,
+                             pages_used=pages_used,
+                             pages_total=pages_total)
         if span is not None:
-            self.tracer.end(span, queue_depth=qd, n_prefilling=n_pre,
-                            n_decoding=n_dec, device_calls=calls)
+            attrs = dict(queue_depth=qd, n_prefilling=n_pre,
+                         n_decoding=n_dec, device_calls=calls)
+            if self.paged:
+                attrs.update(pages_used=pages_used,
+                             pages_total=pages_total)
+            self.tracer.end(span, **attrs)
         self.tick_count += 1
         if self.journal is not None:
             # ONE write + fsync for the whole tick's batch (admits,
@@ -604,7 +707,7 @@ class ServeEngine:
 
     # -------------------------------------------------------------- phases
 
-    def _pop_next(self, tick: int):
+    def _pop_next(self, tick: int, can_admit=None):
         """Next request to admit, or None. "fifo" pops the head once it
         has arrived. "spf" picks the shortest ARRIVED prompt — unless a
         request has already been passed over ``spf_age_cap`` times, in
@@ -618,7 +721,14 @@ class ServeEngine:
 
         The queue is arrival-sorted, so the arrived set is a PREFIX:
         one O(arrived) scan finds the pick's index and the deque delete
-        shifts at most that prefix — no full-queue equality scan."""
+        shifts at most that prefix — no full-queue equality scan.
+
+        ``can_admit(req) -> bool`` is the paged admission gate (enough
+        free pages for the prompt). A gated-out pick stays at the head
+        with NO side effects — no skip increments, no reorder: page
+        waits are head-of-line blocking, not queue jumping, so FIFO
+        order survives page pressure and the spf skip bound is
+        unaffected by it."""
         arrived = []
         for i, r in enumerate(self.queue):
             if r.arrival > tick:
@@ -636,29 +746,84 @@ class ServeEngine:
             else:
                 idx, req = min(arrived, key=lambda ir: (
                     ir[1].prompt_len, ir[1].arrival, ir[1].rid))
-                for _, r in arrived:
-                    if r is not req:
-                        self.skips[r.rid] += 1
+        if can_admit is not None and not can_admit(req):
+            return None
+        if self.schedule != "fifo" and not \
+                (self.skips[req.rid] >= self.spf_age_cap):
+            for _, r in arrived:
+                if r is not req:
+                    self.skips[r.rid] += 1
         del self.queue[idx]
         return req
 
     def _admit(self, tick: int):
         """QUEUED -> PREFILLING: pop arrived requests into free slots and
         ZERO the slots' stale cache slices (the previous occupant's
-        KV/SSM state must not leak into the new request)."""
+        KV/SSM state must not leak into the new request).
+
+        Paged engines admit PREEMPTED requests first (FIFO — they are
+        the oldest admitted work), then the queue, each gated on free
+        pages for the full (re-)prefill record rather than merely a free
+        slot. A gate miss is head-of-line blocking: nothing younger
+        jumps it (jumping would re-trigger the very preemptions that
+        freed the pages)."""
         if self._has_deadlines:
             self._shed_hopeless_queue(tick)
         mask = np.zeros((self.n_slots,), bool)
         for s, slot in enumerate(self.slots):
             if slot.state is not SlotState.FREE:
                 continue
-            req = self._pop_next(tick)
+            if self.preempted:
+                ent = self.preempted[0]
+                emitted = self.outputs.get(ent.rid, [])
+                record = (np.concatenate(
+                              [ent.durable,
+                               np.asarray(emitted, np.int32)])
+                          if emitted else ent.durable)
+                need = self.page_alloc.pages_for(len(record))
+                if need > self.page_alloc.free_pages:
+                    self.metrics.on_alloc_failure()
+                    break                 # head-of-line: wait for pages
+                self.preempted.popleft()
+                self.page_alloc.grow(s, need)
+                self.slots[s] = _Slot(
+                    state=SlotState.PREFILLING, rid=ent.rid, prompt=record,
+                    durable=ent.durable, gen_len=ent.gen_len,
+                    deadline=ent.deadline, fault_count=ent.fault_count,
+                    replay=bool(emitted), admit_seq=self._admit_seq)
+                self._admit_seq += 1
+                mask[s] = True
+                self.metrics.on_admit(ent.rid, tick, skips=0)
+                if self.journal is not None:
+                    self.journal.append("admit", tick, rid=int(ent.rid),
+                                        slot=s, skips=0)
+                if self.tracer is not None:
+                    self.tracer.event("admit", tick, rid=ent.rid, slot=s,
+                                      wait=0, skips=0, resumed=True)
+                iv = SlotInterval(slot=s, rid=ent.rid, admit_tick=tick)
+                self.slot_log.append(iv)
+                self._open_interval[s] = iv
+                continue
+            can_admit = None
+            if self.paged:
+                def can_admit(r):
+                    need = self.page_alloc.pages_for(r.prompt_len)
+                    if need > self.page_alloc.free_pages:
+                        self.metrics.on_alloc_failure()
+                        return False
+                    return True
+            req = self._pop_next(tick, can_admit)
             if req is None:
                 break
             prompt = np.asarray(req.prompt, np.int32)
             self.slots[s] = _Slot(
                 state=SlotState.PREFILLING, rid=req.rid, prompt=prompt,
-                durable=prompt, gen_len=req.gen_len, deadline=req.deadline)
+                durable=prompt, gen_len=req.gen_len, deadline=req.deadline,
+                admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            if self.paged:
+                self.page_alloc.grow(
+                    s, self.page_alloc.pages_for(len(prompt)))
             mask[s] = True
             self.outputs[req.rid] = []
             skips = self.skips.pop(req.rid, 0)
@@ -673,7 +838,96 @@ class ServeEngine:
             self.slot_log.append(iv)
             self._open_interval[s] = iv
         if mask.any():
-            self.cache = self._reset(self.cache, jnp.asarray(mask))
+            self.cache = self._reset_call(mask)
+
+    # ------------------------------------------------------- page pressure
+
+    def _ptab(self):
+        """Device copy of the allocator's page table, refreshed only
+        when the allocator actually mutated (version counter) — the
+        common decode tick reuses the cached array."""
+        if self._ptab_version != self.page_alloc.version:
+            self._ptab_cached = jnp.asarray(self.page_alloc.table())
+            self._ptab_version = self.page_alloc.version
+        return self._ptab_cached
+
+    def _reset_call(self, mask):
+        if self.paged:
+            return self._reset(self.cache, jnp.asarray(mask), self._ptab())
+        return self._reset(self.cache, jnp.asarray(mask))
+
+    def _slot_pages_needed(self, s: int) -> int:
+        """Pages slot ``s`` must own BEFORE this tick's device calls: a
+        prefilling slot writes up to its next chunk's end; a decoding
+        slot writes exactly one token at position
+        len(durable) + len(outputs) - 1."""
+        slot = self.slots[s]
+        if slot.state is SlotState.PREFILLING:
+            step = (self.prefill_chunk if self.prefill_mode == "chunked"
+                    else 1)
+            tokens = min(slot.cursor + step, len(slot.prompt))
+            if self.prefill_mode == "chunked" and \
+                    tokens == len(slot.prompt):
+                # the chunk that finishes the prompt flips the slot to
+                # DECODING within this same tick, and that first decode
+                # step writes one position PAST the prompt
+                tokens += 1
+        else:                              # DECODING
+            tokens = len(slot.durable) + len(self.outputs[slot.rid])
+        return self.page_alloc.pages_for(tokens)
+
+    def _page_growth(self, tick: int):
+        """Grow each occupied slot to the pages this tick's writes need,
+        OLDEST admission first. Page pressure preempts the YOUNGEST
+        occupied slot strictly younger than the needer (a needer with no
+        younger neighbor preempts itself — it cannot steal from its
+        elders, which is what makes the oldest admitted request always
+        runnable and the policy livelock-free: submit() guarantees its
+        total need fits the pool)."""
+        order = sorted((s for s in range(self.n_slots)
+                        if self.slots[s].state is not SlotState.FREE),
+                       key=lambda s: self.slots[s].admit_seq)
+        for s in order:
+            slot = self.slots[s]
+            if slot.state is SlotState.FREE:
+                continue                   # preempted earlier in the walk
+            need = self._slot_pages_needed(s)
+            while not self.page_alloc.grow(s, need):
+                self.metrics.on_alloc_failure()
+                younger = [v for v in range(self.n_slots)
+                           if v != s
+                           and self.slots[v].state is not SlotState.FREE
+                           and self.slots[v].admit_seq > slot.admit_seq]
+                if younger:
+                    victim = max(younger,
+                                 key=lambda v: self.slots[v].admit_seq)
+                    self._preempt(victim, tick)
+                else:
+                    self._preempt(s, tick)
+                    break
+
+    def _preempt(self, s: int, tick: int):
+        """Evict slot ``s`` under page pressure: free its pages, push it
+        onto the FIFO re-admission deque, and journal the transition (a
+        "preempt" record — restore must know the slot's pages were
+        surrendered). The emitted tokens stay in ``outputs``; the
+        re-admitted record is durable + outputs, and because chunked
+        prefill == sequential decode, the resumed stream is BITWISE the
+        unpreempted one."""
+        slot = self.slots[s]
+        rid = slot.rid
+        freed = self.page_alloc.release(s)
+        self.metrics.on_preempt(rid, tick)
+        if self.journal is not None:
+            self.journal.append("preempt", tick, rid=int(rid), slot=s)
+        if self.tracer is not None:
+            self.tracer.event("preempt", tick, rid=rid, slot=s,
+                              freed_pages=freed)
+        self._close_interval(s, tick)
+        self.preempted.append(_Preempted(
+            rid=rid, durable=slot.durable, gen_len=slot.gen_len,
+            deadline=slot.deadline, fault_count=slot.fault_count))
+        self.slots[s] = _Slot()
 
     def _prefill_phase(self, tick: int) -> int:
         prefilling = {s: slot.prompt for s, slot in enumerate(self.slots)
@@ -692,9 +946,12 @@ class ServeEngine:
                     replay=replaying, restore=restoring)
                 if self.tracer is not None else None)
         c0 = time.monotonic()
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(n_valid))
+        if self.paged:
+            args = args + (self._ptab(),)
         res = self._device_call("prefill", self.prefill_kind,
-                                self._prefill, self.params, self.cache,
-                                jnp.asarray(tokens), jnp.asarray(n_valid))
+                                self._prefill, *args)
         dur_s = time.monotonic() - c0
         if span is not None:
             self.tracer.end(span, ok=res is not None)
@@ -748,9 +1005,11 @@ class ServeEngine:
                     occupancy=float(active.mean()))
                 if self.tracer is not None else None)
         c0 = time.monotonic()
-        res = self._device_call("decode", "decode", self._decode,
-                                self.params, self.cache,
-                                jnp.asarray(tokens), jnp.asarray(active))
+        args = (self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(active))
+        if self.paged:
+            args = args + (self._ptab(),)
+        res = self._device_call("decode", "decode", self._decode, *args)
         dur_s = time.monotonic() - c0
         if span is not None:
             self.tracer.end(span, ok=res is not None)
@@ -880,6 +1139,8 @@ class ServeEngine:
                 self.tracer.event("shed", tick, rid=rid, slot=s,
                                   reason="fault_budget")
             self._close_interval(s, tick)
+            if self.paged:
+                self.page_alloc.release(s)
             self.slots[s] = _Slot()
             return
         self.metrics.on_replay(rid)
@@ -898,21 +1159,32 @@ class ServeEngine:
                               record_len=int(len(record)))
         mask = np.zeros((self.n_slots,), bool)
         mask[s] = True
-        self.cache = self._reset(self.cache, jnp.asarray(mask))
+        self.cache = self._reset_call(mask)
 
     # ------------------------------------------------------ SLO shedding --
 
-    def _min_ticks_to_done(self, prompt_left: int, gen_left: int) -> int:
+    def _min_ticks_to_done(self, prompt_left: int, gen_left: int,
+                           queued: bool = False) -> int:
         """OPTIMISTIC ticks (including the current one) until the
         request finishes: the last prefill chunk emits the first of the
         remaining tokens, then one token per tick. A lower bound, so a
         request is only ever shed when its deadline is provably
-        unreachable."""
-        if prompt_left > 0:
-            chunks = (math.ceil(prompt_left / self.prefill_chunk)
-                      if self.prefill_mode == "chunked" else prompt_left)
-            return chunks + max(gen_left - 1, 0)
-        return max(gen_left, 1)
+        unreachable.
+
+        ``queued=True`` on a paged engine adds the page-wait floor: when
+        the free pool cannot cover the prompt's pages, admission cannot
+        happen THIS tick — at least one tick must pass for any release
+        to free pages. Exactly +1 keeps the estimate a lower bound (one
+        release could free everything needed)."""
+        est = (((math.ceil(prompt_left / self.prefill_chunk)
+                 if self.prefill_mode == "chunked" else prompt_left)
+                + max(gen_left - 1, 0))
+               if prompt_left > 0 else max(gen_left, 1))
+        if queued and self.paged and \
+                self.page_alloc.pages_for(prompt_left) > \
+                self.page_alloc.free_pages:
+            est += 1
+        return est
 
     def _shed_hopeless_queue(self, tick: int):
         """Drop arrived queued requests whose deadline is unreachable
@@ -922,7 +1194,8 @@ class ServeEngine:
         kept = []
         while self.queue and self.queue[0].arrival <= tick:
             r = self.queue.popleft()
-            est = self._min_ticks_to_done(r.prompt_len, r.gen_len)
+            est = self._min_ticks_to_done(r.prompt_len, r.gen_len,
+                                          queued=True)
             if r.deadline is not None and tick + est - 1 > r.deadline:
                 self.skips.pop(r.rid, None)
                 self.metrics.on_shed(r.rid, tick, "deadline")
@@ -956,6 +1229,8 @@ class ServeEngine:
                     self.tracer.event("shed", tick, rid=slot.rid, slot=s,
                                       reason="deadline", where="slot")
                 self._close_interval(s, tick)
+                if self.paged:
+                    self.page_alloc.release(s)
                 self.slots[s] = _Slot()   # cache zeroed at next admit
 
     # ------------------------------------------------------------- helpers
@@ -1001,4 +1276,6 @@ class ServeEngine:
             self.tracer.event("release", tick, rid=slot.rid, slot=s,
                               tokens=len(self.outputs[slot.rid]))
         self._close_interval(s, tick)
+        if self.paged:
+            self.page_alloc.release(s)
         self.slots[s] = _Slot()           # FREE; cache zeroed at next admit

@@ -27,13 +27,18 @@ Record kinds (``kind`` field; every record carries ``tick``):
   kind        fields
   ==========  ==========================================================
   submit      rid, prompt (token list), gen_len, arrival, deadline
-  admit       rid, slot, skips
+  admit       rid, slot, skips — also a PREEMPTED request re-entering a
+              slot (its tokens so far are the token records; the replay
+              record is prompt + tokens)
   token       rid, token — one generated token, in emission order
   done        rid — the request completed its stream
   shed        rid, reason — dropped after acceptance (deadline,
               fault_budget)
   reject      rid, reason, prompt_len, gen_len, arrival, deadline —
               refused at submit (oversized, queue_full, duplicate_rid)
+  preempt     rid, slot — evicted under page pressure (paged engine);
+              the slot's pages were surrendered and the request waits
+              for re-admission with its emitted tokens intact
   ==========  ==========================================================
 
 Journaling is PASSIVE: with ``journal=None`` (the engine default) the
@@ -53,7 +58,8 @@ import os
 import zlib
 from typing import Dict, List, Optional, Tuple
 
-RECORD_KINDS = ("submit", "admit", "token", "done", "shed", "reject")
+RECORD_KINDS = ("submit", "admit", "token", "done", "shed", "reject",
+                "preempt")
 
 
 class JournalError(RuntimeError):
@@ -200,12 +206,17 @@ def fold_records(records: List[dict]) -> dict:
         metrics);
       * ``done`` / ``shed`` / ``rejected`` — terminal outcomes
         (rid -> record);
+      * ``preempted``  — rid -> the LAST preempt record for requests
+        still waiting for re-admission at the tail's end (a later admit
+        clears the entry; insertion order == re-admission order). Their
+        slot's ``admits`` entry is cleared too — a preempted slot holds
+        nothing;
       * ``last_tick``  — highest tick any record carries (-1 if empty):
         the restored engine resumes at ``last_tick + 1``.
     """
     out = {"submits": {}, "admits": {}, "admitted": {}, "tokens": {},
            "token_ticks": {}, "done": {}, "shed": {}, "rejected": {},
-           "last_tick": -1}
+           "preempted": {}, "last_tick": -1}
     for rec in records:
         kind = rec["kind"]
         out["last_tick"] = max(out["last_tick"], rec["tick"])
@@ -215,6 +226,12 @@ def fold_records(records: List[dict]) -> dict:
         elif kind == "admit":
             out["admits"][rec["slot"]] = rec
             out["admitted"][rid] = rec
+            out["preempted"].pop(rid, None)   # re-admitted
+        elif kind == "preempt":
+            out["preempted"][rid] = rec
+            cur = out["admits"].get(rec["slot"])
+            if cur is not None and cur.get("rid") == rid:
+                del out["admits"][rec["slot"]]
         elif kind == "token":
             out["tokens"].setdefault(rid, []).append(rec["token"])
             out["token_ticks"].setdefault(rid, []).append(rec["tick"])

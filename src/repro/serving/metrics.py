@@ -33,6 +33,7 @@ class RequestMetrics:
     skips: int = 0                    # times queue-jumped before admission
     faults: int = 0                   # faults charged to this request
     replays: int = 0                  # recovery-by-replay re-prefills
+    preemptions: int = 0              # page-pressure evictions suffered
     #: terminal outcome: "done", "rejected" (refused at submit),
     #: "shed" (dropped after acceptance — deadline or fault budget);
     #: None while queued / in flight
@@ -62,6 +63,10 @@ class TickMetrics:
     n_prefilling: int
     n_decoding: int
     device_calls: int
+    # page-pool occupancy (paged engines only; None keeps contiguous
+    # engines' rows and old snapshots loadable unchanged)
+    pages_used: Optional[int] = None
+    pages_total: Optional[int] = None
 
 
 class MetricsRecorder:
@@ -84,6 +89,9 @@ class MetricsRecorder:
         self.rejected = 0                       # refused at submit
         self.shed = 0                           # dropped after acceptance
         self.straggler_ticks = 0                # wall-time outlier ticks
+        # paging counters (paged engines; zero otherwise)
+        self.preemptions = 0                    # page-pressure evictions
+        self.alloc_failures = 0                 # unsatisfiable page asks
         #: device calls by the step's call_kind tag; replay prefills are
         #: tagged "<kind>+replay" so recovery traffic is attributable
         #: (launch.steps.build_step call_kind contract)
@@ -122,8 +130,13 @@ class MetricsRecorder:
             arrival=arrival, deadline=deadline)
 
     def on_admit(self, rid, tick, skips: int = 0):
-        self.requests[rid].admitted_tick = tick
-        self.requests[rid].skips = skips
+        r = self.requests[rid]
+        if r.admitted_tick is None:
+            # a preempted request's RE-admission must not move its
+            # admission-wait clock — the user-visible wait ended at the
+            # first admit
+            r.admitted_tick = tick
+            r.skips = skips
 
     def on_prefill_step(self, rid):
         self.requests[rid].prefill_steps += 1
@@ -139,9 +152,10 @@ class MetricsRecorder:
         self.requests[rid].outcome = "done"
 
     def on_tick(self, tick, queue_depth, n_prefilling, n_decoding,
-                device_calls):
+                device_calls, pages_used=None, pages_total=None):
         self.ticks.append(TickMetrics(tick, queue_depth, n_prefilling,
-                                      n_decoding, device_calls))
+                                      n_decoding, device_calls,
+                                      pages_used, pages_total))
 
     def on_device_call(self, call: str, kind: Optional[str] = None,
                        replay: bool = False, restore: bool = False,
@@ -213,6 +227,22 @@ class MetricsRecorder:
         self.replays += 1
         self.requests[rid].replays += 1
 
+    # -- paging events -----------------------------------------------------
+    def on_preempt(self, rid, tick):
+        """A request evicted from its slot under page pressure (not a
+        shed — it re-enters later with its stream intact)."""
+        self.preemptions += 1
+        if rid in self.requests:
+            self.requests[rid].preemptions += 1
+
+    def on_alloc_failure(self):
+        """A page allocation that could not be satisfied this tick —
+        the admission gate held a request back, or slot growth had to
+        preempt. The counter is the page-pressure signal capacity
+        planning reads (alloc failures ~ 0 means the pool is sized
+        generously; climbing means preemption churn)."""
+        self.alloc_failures += 1
+
     def on_straggler(self, tick):
         self.straggler_ticks += 1
 
@@ -252,6 +282,8 @@ class MetricsRecorder:
             "rejected": self.rejected,
             "shed": self.shed,
             "straggler_ticks": self.straggler_ticks,
+            "preemptions": self.preemptions,
+            "alloc_failures": self.alloc_failures,
             "calls_by_kind": dict(self.calls_by_kind),
             "call_latency": {tag: h.to_dict()
                              for tag, h in self.call_latency.items()},
@@ -277,6 +309,9 @@ class MetricsRecorder:
         self.rejected = int(d["rejected"])
         self.shed = int(d["shed"])
         self.straggler_ticks = int(d["straggler_ticks"])
+        # .get: pre-paging snapshots carry no paging counters
+        self.preemptions = int(d.get("preemptions", 0))
+        self.alloc_failures = int(d.get("alloc_failures", 0))
         self.calls_by_kind = {str(k): int(v)
                               for k, v in d["calls_by_kind"].items()}
         self.call_latency = {str(tag): LogHistogram.from_dict(h)
@@ -346,6 +381,19 @@ class MetricsRecorder:
             "retries_by_kind": dict(self.retries_by_kind),
             "replays": self.replays,
             "straggler_ticks": self.straggler_ticks,
+            # paging block: preemption churn + page-pool occupancy over
+            # the run (None when the engine is not paged)
+            "n_preemptions": self.preemptions,
+            "page_alloc_failures": self.alloc_failures,
+            "pages_used_mean": (
+                sum(pu) / len(pu) if (pu := [t.pages_used
+                                             for t in self.ticks
+                                             if t.pages_used is not None])
+                else None),
+            "pages_used_max": max(pu) if pu else None,
+            "pages_total": next(
+                (t.pages_total for t in self.ticks
+                 if t.pages_total is not None), None),
             "calls_by_kind": dict(self.calls_by_kind),
             "call_latency_ms": {tag: h.summary_ms()
                                 for tag, h in self.call_latency.items()},
@@ -392,6 +440,7 @@ class MetricsRecorder:
                 "skips": r.skips,
                 "faults": r.faults,
                 "replays": r.replays,
+                "preemptions": r.preemptions,
                 "outcome": r.outcome,
                 "reason": r.reason,
             })

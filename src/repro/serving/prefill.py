@@ -63,24 +63,38 @@ def assemble_chunk(prompts: Dict[int, np.ndarray], cursors: Dict[int, int],
 
 
 def build_chunk_step(cfg, mesh, params, cache, n_slots: int, chunk: int,
-                     stacked_tables=None):
+                     stacked_tables=None, paged: bool = False,
+                     max_pages: int = 0):
     """Jit the fixed-shape chunk prefill step with serving shardings.
 
     Compiles ONCE for (n_slots, chunk) — every request, whatever its
     prompt length, flows through this single executable (ragged tails via
-    n_valid), which is what keeps admission latency flat under load."""
+    n_valid), which is what keeps admission latency flat under load.
+
+    paged=True compiles the page-table variant: one extra trailing
+    ``ptab`` (n_slots, max_pages) int32 operand (the host allocator's
+    table) the KV writes scatter through. The table is per-call data,
+    not cache state — page churn between calls never recompiles."""
     import jax.numpy as jnp
 
     step_fn, shard_fn = build_step(cfg, mesh, "prefill_chunk",
-                                   stacked_tables=stacked_tables)
+                                   stacked_tables=stacked_tables,
+                                   paged=paged)
     tok0 = jnp.zeros((n_slots, chunk), jnp.int32)
     nv0 = jnp.zeros((n_slots,), jnp.int32)
-    pspec, cspec, tspec, nspec = shard_fn(params, cache, tok0, nv0)
+    if paged:
+        pt0 = jnp.full((n_slots, max_pages), -1, jnp.int32)
+        pspec, cspec, tspec, nspec, ptspec = shard_fn(params, cache, tok0,
+                                                      nv0, pt0)
+        in_sh = (shr.named(pspec, mesh), shr.named(cspec, mesh),
+                 shr.named(tspec, mesh), shr.named(nspec, mesh),
+                 shr.named(ptspec, mesh))
+    else:
+        pspec, cspec, tspec, nspec = shard_fn(params, cache, tok0, nv0)
+        in_sh = (shr.named(pspec, mesh), shr.named(cspec, mesh),
+                 shr.named(tspec, mesh), shr.named(nspec, mesh))
     jitted = jax.jit(step_fn,
-                     in_shardings=(shr.named(pspec, mesh),
-                                   shr.named(cspec, mesh),
-                                   shr.named(tspec, mesh),
-                                   shr.named(nspec, mesh)),
+                     in_shardings=in_sh,
                      # pin the returned cache to the spec it arrives
                      # with; propagated (replicated) output shardings
                      # make downstream steps recompile at tick 1

@@ -65,7 +65,12 @@ import numpy as np
 from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
                                          save_checkpoint)
 
-SNAPSHOT_VERSION = 1
+#: v2 added the paged-engine fields: ``engine.paged/page_size/n_pages``
+#: plus the ``paging`` block (per-slot page ownership + the preempted
+#: re-admission deque). v1 snapshots stay restorable — the new fields
+#: default to the contiguous engine.
+SNAPSHOT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 #: engine construction knobs stored in (and restored from) the manifest
 ENGINE_KEYS = ("n_slots", "max_len", "prefill_chunk", "prefill_mode",
@@ -104,6 +109,7 @@ def _slot_rows(engine) -> List[dict]:
                          else float(slot.deadline)),
             "fault_count": int(slot.fault_count),
             "replay": bool(slot.replay),
+            "admit_seq": int(slot.admit_seq),
         })
     return rows
 
@@ -120,7 +126,7 @@ def save_snapshot(engine) -> str:
         "tick": int(engine.tick_count),
         "journal_offset": (engine.journal.offset
                            if engine.journal is not None else None),
-        "engine": {"arch": engine.cfg.name,
+        "engine": {"arch": engine.cfg.name, "paged": bool(engine.paged),
                    **{k: getattr(engine, k) for k in ENGINE_KEYS}},
         "slots": _slot_rows(engine),
         "queue": [{"rid": int(r.rid),
@@ -140,6 +146,25 @@ def save_snapshot(engine) -> str:
                      for iv in engine.slot_log],
         "metrics": engine.metrics.state_dict(),
     }
+    if engine.paged:
+        extra["engine"]["page_size"] = int(engine.page_size)
+        extra["engine"]["n_pages"] = int(engine.n_pages)
+        extra["paging"] = {
+            # page ownership at snapshot time: the positions already in
+            # the pool for a trusted slot live in EXACTLY these pages,
+            # in position order — restore must pin them back
+            "slot_pages": engine.page_alloc.slot_pages(),
+            # the FIFO re-admission deque (requests evicted under page
+            # pressure, still waiting); their emitted tokens are in
+            # ``outputs``, so rid + durable record reconstructs them
+            "preempted": [{"rid": int(p.rid),
+                           "durable": [int(t) for t in p.durable],
+                           "gen_len": int(p.gen_len),
+                           "deadline": (None if p.deadline is None
+                                        else float(p.deadline)),
+                           "fault_count": int(p.fault_count)}
+                          for p in engine.preempted],
+        }
     return save_checkpoint(engine.snapshot_dir, engine.tick_count,
                            {"cache": host_cache}, extra=extra,
                            keep=engine.snapshot_keep)
@@ -156,7 +181,7 @@ def read_snapshot_meta(snapshot_dir: str,
             raise FileNotFoundError(f"no snapshots in {snapshot_dir}")
     man = Path(snapshot_dir) / f"step_{step:010d}" / "manifest.json"
     extra = json.loads(man.read_text())["extra"]
-    if extra.get("version") != SNAPSHOT_VERSION:
+    if extra.get("version") not in _READABLE_VERSIONS:
         raise SnapshotError(f"unknown snapshot version "
                             f"{extra.get('version')!r}")
     return step, extra
@@ -177,12 +202,14 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
     ``step`` plus the journal tail. Returns the restore stats dict (also
     left on ``engine.restore_stats``). See module docstring for the
     replay math."""
-    from repro.serving.engine import SlotInterval, SlotState, _Slot
+    from repro.serving.engine import (SlotInterval, SlotState, _Preempted,
+                                      _Slot)
     from repro.serving.journal import Journal, fold_records, read_journal
 
-    cache_like = jax.tree_util.tree_map(np.asarray, engine.cache)
-    tree, step, extra = load_checkpoint(snapshot_dir, {"cache": cache_like},
-                                        step)
+    # geometry gate BEFORE touching cache arrays: a paged<->contiguous
+    # mismatch would otherwise die inside load_checkpoint on leaf-key
+    # inequality instead of saying what is actually wrong
+    step, extra = read_snapshot_meta(snapshot_dir, step)
     eng_meta = extra["engine"]
     if eng_meta["arch"] != engine.cfg.name:
         raise SnapshotError(f"snapshot arch {eng_meta['arch']!r} != "
@@ -193,6 +220,21 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
                 f"snapshot {k}={eng_meta[k]!r} != engine "
                 f"{getattr(engine, k)!r} — restore needs identical "
                 f"geometry for the cache layout to be meaningful")
+    if bool(eng_meta.get("paged", False)) != engine.paged:
+        raise SnapshotError(
+            f"snapshot paged={eng_meta.get('paged', False)!r} != engine "
+            f"paged={engine.paged!r} — the cache representations are "
+            f"not interchangeable")
+    if engine.paged:
+        for k in ("page_size", "n_pages"):
+            if int(eng_meta[k]) != getattr(engine, k):
+                raise SnapshotError(
+                    f"snapshot {k}={eng_meta[k]!r} != engine "
+                    f"{getattr(engine, k)!r} — page ids in the snapshot "
+                    f"table index a pool of this exact geometry")
+    cache_like = jax.tree_util.tree_map(np.asarray, engine.cache)
+    tree, step, extra = load_checkpoint(snapshot_dir, {"cache": cache_like},
+                                        step)
     engine.cache = jax.device_put(tree["cache"], engine._cache_sharding)
 
     # -- journal tail (records the snapshot does NOT already reflect) --
@@ -263,6 +305,8 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
             m.on_reject(rid, rec["prompt_len"], rec["gen_len"],
                         rec["arrival"], rec["reason"],
                         deadline=rec["deadline"])
+        elif kind == "preempt":
+            m.on_preempt(rid, tick)
 
     # -- slot audit log + live occupancy through the tail --------------
     engine.slot_log = [SlotInterval(slot=int(s), rid=int(r),
@@ -283,6 +327,13 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
                               admit_tick=int(rec["tick"]))
             engine.slot_log.append(iv)
             engine._open_interval[s] = iv
+        elif rec["kind"] == "preempt":
+            s = int(rec["slot"])
+            if assign.get(s) == int(rec["rid"]):
+                del assign[s]
+            iv = engine._open_interval.pop(s, None)
+            if iv is not None:
+                iv.release_tick = int(rec["tick"]) + 1
         elif rec["kind"] in ("done", "shed"):
             rid = rec.get("rid")
             s = next((s for s, r in assign.items() if r == rid), None)
@@ -302,25 +353,65 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
                                  fsync=journal_fsync)
 
     # -- rebuild occupied slots on the PR 7 replay path ----------------
+    # admission age must survive restore in paged mode: page pressure
+    # preempts YOUNGEST-first, so a restored engine that forgot who is
+    # older would evict different victims than the uninterrupted one
+    seq_base = max((int(r.get("admit_seq", -1)) for r in slot_meta
+                    if r["state"] != "free"), default=-1) + 1
+    tail_admit_order = {}
+    for i, rec in enumerate(tail):
+        if rec["kind"] == "admit":
+            tail_admit_order[int(rec["rid"])] = i
+    snap_pages = (extra.get("paging", {}).get("slot_pages")
+                  if engine.paged else None)
+    snap_rows_by_rid = {int(r["rid"]): r for r in slot_meta
+                        if r["state"] != "free"}
+    snap_pre = (extra.get("paging", {}).get("preempted") or [])
+    snap_pre_by_rid = {int(r["rid"]): r for r in snap_pre}
+    pages_by_slot = [[] for _ in range(engine.n_slots)]
     reset_mask = np.zeros((engine.n_slots,), bool)
     replayed = fresh = restored = 0
+    max_seq = seq_base - 1
     for s in range(engine.n_slots):
         rid = assign.get(s)
         if rid is None:
             engine.slots[s] = _Slot()
             continue
         row = slot_meta[s]
-        if row["state"] != "free" and int(row["rid"]) == rid:
+        if row["state"] != "free" and int(row["rid"]) == rid \
+                and rid not in fold["admitted"]:
+            # same occupant since the snapshot, never preempted in the
+            # tail (a tail re-admit means its snapshot pages were
+            # surrendered — the saved cache slice is stale)
             durable = np.asarray(row["durable"], np.int32)
             gen_len = int(row["gen_len"])
             deadline = row["deadline"]
             fault_count = int(row["fault_count"])
             cursor = int(row["cache_tokens"])
+            admit_seq = int(row.get("admit_seq", s))
+            if snap_pages is not None:
+                # the snapshot cache's positions 0..cursor-1 live in
+                # exactly these pool pages, in position order
+                pages_by_slot[s] = [int(p) for p in snap_pages[s]]
         else:                              # admitted after the snapshot:
-            req = requests_by_rid[rid]     # no trusted cache, start over
-            durable = np.asarray(req.prompt, np.int32)
-            gen_len, deadline = req.gen_len, req.deadline
-            fault_count, cursor = 0, 0
+            prow = snap_rows_by_rid.get(rid) or snap_pre_by_rid.get(rid)
+            if prow is not None:
+                # preempted (pre- or post-snapshot), re-admitted in the
+                # tail: the durable record rides the snapshot rows, not
+                # the queue
+                durable = np.asarray(prow["durable"], np.int32)
+                gen_len = int(prow["gen_len"])
+                deadline = prow["deadline"]
+                fault_count = int(prow.get("fault_count", 0))
+            else:                          # no trusted cache, start over
+                req = requests_by_rid[rid]
+                durable = np.asarray(req.prompt, np.int32)
+                gen_len, deadline = req.gen_len, req.deadline
+                fault_count = 0
+            cursor = 0
+            # pages re-grow on demand at the next tick's _page_growth
+            admit_seq = seq_base + tail_admit_order.get(rid, 0)
+        max_seq = max(max_seq, admit_seq)
         emitted = outputs.get(rid, [])
         if len(emitted) >= gen_len:
             # every token was journaled but the done record was lost in
@@ -333,6 +424,7 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
             if iv is not None:
                 iv.release_tick = end_tick + 1
             engine.slots[s] = _Slot()
+            pages_by_slot[s] = []          # settled: pages back to free
             continue
         record = (np.concatenate([durable,
                                   np.asarray(emitted, np.int32)])
@@ -352,10 +444,45 @@ def restore_engine_state(engine, snapshot_dir: str, step: int, *,
             state=SlotState.PREFILLING, rid=rid, prompt=record,
             durable=durable, cursor=cursor, gen_len=gen_len,
             deadline=deadline, fault_count=fault_count,
-            replay=bool(emitted), restore=True)
+            replay=bool(emitted), restore=True, admit_seq=admit_seq)
         restored += 1
+    if engine.paged:
+        engine.page_alloc.load_slot_pages(pages_by_slot)
+        engine._admit_seq = max_seq + 1
+        # re-admission deque: snapshot entries still waiting (their tail
+        # admit/terminal clears them), then tail preempts in record
+        # order — FIFO age survives the crash
+        terminal = set(fold["done"]) | set(fold["shed"])
+        pre = []
+        for prow in snap_pre:
+            rid = int(prow["rid"])
+            if rid in fold["admitted"] or rid in terminal:
+                continue
+            pre.append(prow)
+        for rid in fold["preempted"]:
+            rid = int(rid)
+            if rid in terminal:
+                continue
+            prow = snap_rows_by_rid.get(rid) or snap_pre_by_rid.get(rid)
+            if prow is None:               # submitted after the snapshot
+                req = requests_by_rid[rid]
+                prow = {"rid": rid, "durable": list(req.prompt),
+                        "gen_len": req.gen_len, "deadline": req.deadline,
+                        "fault_count": 0}
+            pre.append(prow)
+        engine.preempted = deque(
+            _Preempted(rid=int(p["rid"]),
+                       durable=np.asarray(p["durable"], np.int32),
+                       gen_len=int(p["gen_len"]),
+                       deadline=(None if p.get("deadline") is None
+                                 else float(p["deadline"])),
+                       fault_count=int(p.get("fault_count", 0)))
+            for p in pre)
+        for p in engine.preempted:
+            engine.outputs.setdefault(p.rid, [])
+        engine.page_alloc.check()
     if reset_mask.any():
-        engine.cache = engine._reset(engine.cache, jnp.asarray(reset_mask))
+        engine.cache = engine._reset_call(reset_mask)
 
     engine.tick_count = max(int(extra["tick"]), fold["last_tick"] + 1)
     stats = {"from_step": int(step),

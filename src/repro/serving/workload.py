@@ -47,6 +47,16 @@ class WorkloadSpec:
       * "bimodal":   short (lo) and long (hi) prompts, 50/50 — the
                      chat-vs-document mix that stresses chunked prefill;
       * "fixed":     every prompt is exactly hi.
+      * "lognormal": lo * LogNormal(0, 0.8) clipped to [lo, hi] — the
+                     right-skewed long-tail real request logs show (most
+                     prompts short, a heavy tail of long ones), the shape
+                     that makes static worst-case cache slots wasteful
+                     and paged pools win;
+      * "zipf":      lo - 1 + Zipf(2.0) clipped to [lo, hi] — an even
+                     heavier power-law tail.
+
+    ``gen_dist`` spreads GENERATION lengths over ``gen_len`` with the
+    same choices (default "uniform", matching older traces bit-for-bit).
 
     ``arrival_rate`` is requests per engine tick (Poisson); 0 puts every
     arrival at tick 0 (closed-loop batch). ``deadline_slack`` (ticks)
@@ -57,6 +67,7 @@ class WorkloadSpec:
     prompt_len: Tuple[int, int] = (4, 24)
     gen_len: Tuple[int, int] = (4, 12)
     dist: str = "uniform"
+    gen_dist: str = "uniform"
     seed: int = 0
     deadline_slack: Optional[float] = None
 
@@ -68,6 +79,10 @@ def _sample_len(rng, lo: int, hi: int, dist: str) -> int:
         return lo if rng.random() < 0.5 else hi
     if dist == "uniform":
         return int(rng.integers(lo, hi + 1))
+    if dist == "lognormal":
+        return int(np.clip(round(lo * rng.lognormal(0.0, 0.8)), lo, hi))
+    if dist == "zipf":
+        return int(np.clip(lo - 1 + rng.zipf(2.0), lo, hi))
     raise ValueError(f"unknown dist {dist!r}")
 
 
@@ -80,7 +95,7 @@ def make_trace(spec: WorkloadSpec, vocab_size: int) -> List[Request]:
         if spec.arrival_rate > 0:
             t += float(rng.exponential(1.0 / spec.arrival_rate))
         plen = _sample_len(rng, *spec.prompt_len, spec.dist)
-        glen = _sample_len(rng, *spec.gen_len, "uniform")
+        glen = _sample_len(rng, *spec.gen_len, spec.gen_dist)
         prompt = tuple(int(x) for x in
                        rng.integers(1, vocab_size, size=max(plen, 1)))
         out.append(Request(rid=rid, prompt=prompt, gen_len=max(glen, 1),
